@@ -1,0 +1,159 @@
+"""E3 — MTCNN cascaded pipeline (paper Table II, Fig 4).
+
+Topology: frame -> 3-scale pyramid (tee) -> P-Net per scale -> NMS+BBR
+merge -> image-patch -> R-Net -> NMS+BBR -> image-patch -> O-Net ->
+overlay decoder -> sink.  Control: identical functions called serially.
+
+Reports overall latency (1-frame-at-a-time), throughput (streaming), and
+per-stage latencies (TensorFilter stats) — the rows of Table II.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import Buffer, parse_pipeline
+from repro.core.elements.sources import VideoTestSrc
+
+from .models_zoo import (bbr, image_patch, make_onet, make_pnet, make_rnet,
+                         nms, pnet_map_to_boxes)
+
+N_FRAMES = 60
+W = H = 160
+SCALES = (1.0, 0.7, 0.5)
+
+
+def _build_fns(key):
+    pnet, rnet, onet = make_pnet(key), make_rnet(jax.random.fold_in(key, 1)), \
+        make_onet(jax.random.fold_in(key, 2))
+
+    def scale_frame(frame, s):
+        if s == 1.0:
+            return frame
+        hi = (np.arange(int(H * s)) / s).astype(int).clip(0, H - 1)
+        wi = (np.arange(int(W * s)) / s).astype(int).clip(0, W - 1)
+        return frame[hi][:, wi]
+
+    def pnet_stage(frame):
+        cands = []
+        for s in SCALES:
+            pmap = np.asarray(pnet(scale_frame(frame, s)))
+            cands.append(pnet_map_to_boxes(pmap, s, thresh=0.5))
+        boxes = np.concatenate(cands) if cands else np.zeros((0, 5), np.float32)
+        return nms(boxes, top=12)
+
+    def rnet_stage(frame, boxes):
+        if len(boxes) == 0:
+            return boxes
+        patches = image_patch(frame, boxes, 24)
+        out = np.asarray(rnet(patches))
+        score = 1 / (1 + np.exp(-out[:, 0]))
+        keep = score > 0.2
+        boxes = bbr(boxes[keep], out[keep, 1:5])
+        boxes[:, 4] = score[keep]
+        return nms(boxes, top=6)
+
+    def onet_stage(frame, boxes):
+        if len(boxes) == 0:
+            return boxes
+        patches = image_patch(frame, boxes, 48)
+        out = np.asarray(onet(patches))
+        score = 1 / (1 + np.exp(-out[:, 0]))
+        keep = score > 0.2
+        boxes = bbr(boxes[keep], out[keep, 1:5])
+        boxes[:, 4] = score[keep]
+        return nms(boxes, top=4)
+
+    return pnet_stage, rnet_stage, onet_stage
+
+
+def _frames(n=N_FRAMES):
+    src = VideoTestSrc("s", width=W, height=H)
+    return [src.create(i).data for i in range(n)]
+
+
+def control_serial(stages) -> Dict:
+    pnet_stage, rnet_stage, onet_stage = stages
+    frames = _frames()
+    # latency: single frame end-to-end
+    lat = []
+    for f in frames[:10]:
+        t0 = time.perf_counter()
+        onet_stage(f, rnet_stage(f, pnet_stage(f)))
+        lat.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for f in frames:
+        onet_stage(f, rnet_stage(f, pnet_stage(f)))
+    wall = time.perf_counter() - t0
+    return {"fps": len(frames) / wall, "latency_ms": 1e3 * np.mean(lat)}
+
+
+def pipeline_run(stages) -> Dict:
+    pnet_stage, rnet_stage, onet_stage = stages
+
+    # custom filters carry (frame, boxes) tuples through the cascade
+    def pnet_f(frame):
+        return frame, pnet_stage(np.asarray(frame))
+
+    def rnet_f(frame, boxes):
+        return frame, rnet_stage(np.asarray(frame), np.asarray(boxes))
+
+    def onet_f(frame, boxes):
+        return onet_stage(np.asarray(frame), np.asarray(boxes))
+
+    models = {"pnet_stage": pnet_f, "rnet_stage": rnet_f, "onet_stage": onet_f}
+    desc = (
+        "appsrc name=src ! queue max_size=4 ! "
+        "tensor_filter framework=python model=pnet_stage name=fp ! queue max_size=4 ! "
+        "tensor_filter framework=python model=rnet_stage name=fr ! queue max_size=4 ! "
+        "tensor_filter framework=python model=onet_stage name=fo ! "
+        "tensor_sink name=out keep=false")
+    pipe = parse_pipeline(desc, models=models)
+    frames = _frames()
+
+    # latency: one frame through the quiet pipeline
+    pipe.start()
+    src = pipe["src"]
+    out = pipe["out"]
+    lat = []
+    for f in frames[:10]:
+        n0 = out.n_received
+        t0 = time.perf_counter()
+        src.push(f)
+        while out.n_received == n0:
+            time.sleep(0.0002)
+        lat.append(time.perf_counter() - t0)
+    # throughput: stream everything
+    t0 = time.perf_counter()
+    for f in frames:
+        src.push(f)
+    src.end_of_stream()
+    out.eos_seen.wait(timeout=300)
+    wall = time.perf_counter() - t0
+    res = {"fps": len(frames) / wall, "latency_ms": 1e3 * np.mean(lat),
+           "stage_ms": {n: 1e3 * pipe[f].mean_latency_s
+                        for n, f in (("pnet", "fp"), ("rnet", "fr"),
+                                     ("onet", "fo"))}}
+    pipe.stop()
+    return res
+
+
+def run() -> List[str]:
+    stages = _build_fns(jax.random.PRNGKey(3))
+    # jit warmup
+    f0 = _frames(1)[0]
+    stages[2](f0, stages[1](f0, stages[0](f0)))
+
+    ctrl = control_serial(stages)
+    nns = pipeline_run(stages)
+    rows = [
+        f"e3_control,{1e6/max(ctrl['fps'],1e-9):.1f},fps={ctrl['fps']:.2f};latency={ctrl['latency_ms']:.1f}ms",
+        f"e3_nnstreamer,{1e6/max(nns['fps'],1e-9):.1f},fps={nns['fps']:.2f};latency={nns['latency_ms']:.1f}ms;"
+        f"thr_gain={100*(nns['fps']/ctrl['fps']-1):+.1f}%",
+    ]
+    for stage, ms in nns["stage_ms"].items():
+        rows.append(f"e3_stage_{stage},{ms*1e3:.1f},per-invoke latency")
+    return rows

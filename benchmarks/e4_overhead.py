@@ -1,0 +1,172 @@
+"""E4 — framework overheads (paper Table III).
+
+Analogs on this host:
+  * backend swap win: the same model invoked through a slow "bound"
+    backend (eager python/numpy) vs the framework-chosen fast backend
+    (jax.jit) — the TF-Lite 1.15.2-vs-2.1 x3.54 story: flexibility to
+    pick the execution engine is itself a performance feature.
+  * pre-processing reuse: naive per-op transform chain vs the fused
+    Pallas transform kernel (MediaPipe re-implemented filters were 25%
+    slower / 40% more overhead).
+  * hybrid embedding: an NNStreamer pipeline embedding a foreign
+    sub-pipeline as one filter (paper case d) — overhead vs native.
+  * per-buffer pipeline overhead: appsrc -> filter(identity) -> sink.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Buffer, parse_pipeline
+from repro.core.elements.transform import TensorTransform, apply_chain_numpy, parse_chain
+from repro.single import SingleShot
+
+from .models_zoo import make_detector
+
+N = 300
+FRAME = (96, 96, 3)
+
+
+def bench_backend_swap() -> List[str]:
+    key = jax.random.PRNGKey(5)
+    det = make_detector(key)
+    frame = (np.random.randint(0, 255, FRAME, np.uint8).astype(np.float32)
+             / 255.0 - 0.5)
+    np.asarray(det(frame))
+
+    # "old bound backend": eager numpy re-implementation of the same net
+    # (stands in for the NNFW version the rigid framework is stuck with)
+    def slow_det(f):
+        x = f.astype(np.float32)[None]
+        rng = np.random.default_rng(0)
+        for i, w in enumerate((16, 32, 64, 64)):
+            kern = rng.standard_normal((3, 3, x.shape[-1], w)).astype(np.float32) * 0.05
+            pad = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+            s = 2 if i % 2 == 0 else 1
+            out = np.zeros((1, (x.shape[1]+s-1)//s, (x.shape[2]+s-1)//s, w), np.float32)
+            for dy in range(3):
+                for dx in range(3):
+                    out += np.einsum("bhwc,co->bhwo",
+                                     pad[:, dy:dy+x.shape[1]:s, dx:dx+x.shape[2]:s, :],
+                                     kern[dy, dx])
+            x = np.maximum(out, 0)
+        return x.mean(axis=(1, 2))
+
+    fast = SingleShot(fn=det, framework="python")
+    slow = SingleShot(fn=slow_det, framework="python")
+    for s in (fast, slow):
+        s.invoke(frame)
+
+    def rate(s, n=60):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            s.invoke(frame)
+        return n / (time.perf_counter() - t0)
+
+    rf, rs = rate(fast), rate(slow, n=10)
+    return [
+        f"e4_backend_fast,{1e6/rf:.1f},fps={rf:.1f}",
+        f"e4_backend_bound,{1e6/rs:.1f},fps={rs:.1f};fast_is_x{rf/rs:.2f}",
+    ]
+
+
+def bench_preprocessing() -> List[str]:
+    chain = "typecast:float32,divide:255.0,subtract:0.5,clamp:-0.5:0.5"
+    x = np.random.randint(0, 255, (64, 224, 224, 3), np.uint8)
+    ops = parse_chain(chain)
+
+    t0 = time.perf_counter()
+    for _ in range(10):
+        apply_chain_numpy(x, ops)
+    naive = (time.perf_counter() - t0) / 10
+
+    from repro.kernels.transform import ops as tops
+    xj = jnp.asarray(x)
+    np.asarray(tops.fused_transform_xla(xj, scale=1/255., bias=-0.5, lo=-0.5,
+                                        hi=0.5, out_dtype=jnp.float32))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        np.asarray(tops.fused_transform_xla(xj, scale=1/255., bias=-0.5,
+                                            lo=-0.5, hi=0.5,
+                                            out_dtype=jnp.float32))
+    fused = (time.perf_counter() - t0) / 10
+    # Pallas kernel correctness cross-check (interpret mode, small slice)
+    small = x[:2]
+    pk = np.asarray(tops.fused_transform(small, scale=1/255., bias=-0.5,
+                                         lo=-0.5, hi=0.5,
+                                         out_dtype=jnp.float32))
+    ref = np.clip(small.astype(np.float32)/255. - 0.5, -0.5, 0.5)
+    assert np.allclose(pk, ref, atol=1e-6)
+    return [
+        f"e4_preproc_naive_chain,{naive*1e6:.1f},per-batch (4 passes)",
+        f"e4_preproc_fused_xla,{fused*1e6:.1f},per-batch (1 pass);"
+        f"naive_is_{100*(naive/fused-1):+.1f}%;pallas_kernel=validated",
+    ]
+
+
+def bench_pipeline_overhead() -> List[str]:
+    pipe = parse_pipeline(
+        "appsrc name=src ! tensor_filter framework=python model=identity ! "
+        "fakesink name=out")
+    pipe.start()
+    src, out = pipe["src"], pipe["out"]
+    x = np.zeros((16,), np.float32)
+    t0 = time.perf_counter()
+    for _ in range(N):
+        src.push(x)
+    wall = time.perf_counter() - t0
+    pipe.stop()
+    per = wall / N
+    return [f"e4_pipeline_overhead,{per*1e6:.2f},per-buffer (filter+2 pads)"]
+
+
+def bench_hybrid() -> List[str]:
+    """Embed a foreign 'sub-pipeline' (python mini-framework) as a filter."""
+    key = jax.random.PRNGKey(6)
+    det = make_detector(key)
+    frame = (np.random.randint(0, 255, FRAME, np.uint8).astype(np.float32)
+             / 255.0 - 0.5)
+    np.asarray(det(frame))
+
+    def foreign_subpipeline(f):
+        x = np.asarray(f, np.float32) * 2.0            # its own pre-proc
+        x = x * 0.5                                    # (round trip, same dtype)
+        return det(x)
+
+    def native(f):
+        return det(f)
+
+    def rate(model, name, n=60):
+        pipe = parse_pipeline(
+            "appsrc name=src ! queue ! tensor_filter framework=python "
+            f"model={name} ! fakesink name=out", models={name: model})
+        pipe.start()
+        src = pipe["src"]
+        t0 = time.perf_counter()
+        for _ in range(n):
+            src.push(frame)
+        src.end_of_stream()
+        pipe["out"].eos_seen.wait(timeout=60)
+        r = n / (time.perf_counter() - t0)
+        pipe.stop()
+        return r
+
+    rn = rate(native, "native")
+    rh = rate(foreign_subpipeline, "hybrid")
+    return [
+        f"e4_native,{1e6/rn:.1f},fps={rn:.1f}",
+        f"e4_hybrid_embed,{1e6/rh:.1f},fps={rh:.1f};overhead={100*(rn/rh-1):+.1f}%",
+    ]
+
+
+def run() -> List[str]:
+    rows = []
+    rows += bench_backend_swap()
+    rows += bench_preprocessing()
+    rows += bench_pipeline_overhead()
+    rows += bench_hybrid()
+    return rows

@@ -1,0 +1,205 @@
+"""Small JAX models standing in for E1-E3's networks.
+
+I3/Y3 (Inception-v3 / YOLO-v3 on an A311D NPU) are represented by two
+jitted convnets of different depths — the benchmark measures *pipeline
+architecture* effects (serial vs pipelined, multi-model sharing), which
+are independent of the absolute model sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _make_conv_params(key, widths, in_ch=3):
+    params = []
+    ch = in_ch
+    for i, w in enumerate(widths):
+        k = jax.random.fold_in(key, i)
+        params.append(jax.random.normal(k, (3, 3, ch, w), jnp.float32)
+                      * (1.0 / np.sqrt(9 * ch)))
+        ch = w
+    return params
+
+
+def make_classifier(key, widths=(16, 32, 64), n_classes=100, name="i3"):
+    """I3 analog: conv stack -> global pool -> classes."""
+    params = _make_conv_params(key, widths)
+    k_head = jax.random.fold_in(key, 99)
+    head = jax.random.normal(k_head, (widths[-1], n_classes), jnp.float32) * 0.05
+
+    @jax.jit
+    def forward(frame):
+        """frame: (H,W,3) float32, already normalized by the pipeline."""
+        x = frame[None].astype(jnp.float32)
+        for i, w in enumerate(params):
+            x = jax.nn.relu(_conv(x, w, stride=2 if i % 2 == 0 else 1))
+        x = x.mean(axis=(1, 2))
+        return (x @ head)[0]
+
+    return forward
+
+
+def make_detector(key, widths=(16, 32, 64, 64), n_boxes=8, name="y3"):
+    """Y3 analog: deeper conv stack -> (N,5) boxes [x,y,w,h,score]."""
+    params = _make_conv_params(key, widths)
+    k_head = jax.random.fold_in(key, 99)
+    head = jax.random.normal(k_head, (widths[-1], n_boxes * 5), jnp.float32) * 0.05
+
+    @jax.jit
+    def forward(frame):
+        """frame: (H,W,3) float32, already normalized by the pipeline."""
+        x = frame[None].astype(jnp.float32)
+        for i, w in enumerate(params):
+            x = jax.nn.relu(_conv(x, w, stride=2 if i % 2 == 0 else 1))
+        x = x.mean(axis=(1, 2))
+        return (x @ head).reshape(n_boxes, 5)
+
+    return forward
+
+
+def make_mlp(key, in_dim, hidden, out_dim, depth: int = 1):
+    ks = jax.random.split(key, depth + 2)
+    w_in = jax.random.normal(ks[0], (in_dim, hidden), jnp.float32) / np.sqrt(in_dim)
+    mids = [jax.random.normal(ks[1 + i], (hidden, hidden), jnp.float32)
+            / np.sqrt(hidden) for i in range(depth)]
+    w_out = jax.random.normal(ks[-1], (hidden, out_dim), jnp.float32) / np.sqrt(hidden)
+
+    @jax.jit
+    def forward(x):
+        h = jax.nn.relu(x.reshape(-1) @ w_in)
+        for w in mids:
+            h = jax.nn.relu(h @ w)
+        return h @ w_out
+
+    return forward
+
+
+# ---------------------------------------------------------------------------
+# MTCNN-style nets (E3): P-Net (fully conv), R-Net, O-Net
+# ---------------------------------------------------------------------------
+
+def make_pnet(key):
+    params = _make_conv_params(key, (8, 16))
+    k_head = jax.random.fold_in(key, 9)
+    head = jax.random.normal(k_head, (3, 3, 16, 6), jnp.float32) * 0.05
+
+    @jax.jit
+    def forward(img):
+        """img: (H,W,3) uint8 -> (h,w,6) map: [score, dx,dy,dw,dh, _]."""
+        x = img[None].astype(jnp.float32) / 255.0
+        for w in params:
+            x = jax.nn.relu(_conv(x, w, stride=2))
+        return _conv(x, head)[0]
+
+    return forward
+
+
+def make_rnet(key, patch=24):
+    params = _make_conv_params(key, (16, 32))
+    k_head = jax.random.fold_in(key, 9)
+    head = jax.random.normal(k_head, (32, 5), jnp.float32) * 0.05
+
+    @jax.jit
+    def forward(patches):
+        """patches: (N,24,24,3) -> (N,5): [score, dx,dy,dw,dh]."""
+        x = patches.astype(jnp.float32) / 255.0
+        for w in params:
+            x = jax.nn.relu(_conv(x, w, stride=2))
+        return x.mean(axis=(1, 2)) @ head
+
+    return forward
+
+
+def make_onet(key, patch=48):
+    params = _make_conv_params(key, (16, 32, 64))
+    k_head = jax.random.fold_in(key, 9)
+    head = jax.random.normal(k_head, (64, 15), jnp.float32) * 0.05
+
+    @jax.jit
+    def forward(patches):
+        """patches: (N,48,48,3) -> (N,15): score+bbr+landmarks."""
+        x = patches.astype(jnp.float32) / 255.0
+        for w in params:
+            x = jax.nn.relu(_conv(x, w, stride=2))
+        return x.mean(axis=(1, 2)) @ head
+
+    return forward
+
+
+# -- post-processing (the 1004-lines-of-C analog, in numpy) -------------------
+
+def nms(boxes: np.ndarray, iou_thresh=0.5, top=16) -> np.ndarray:
+    """boxes: (N,5) [x,y,w,h,score] -> kept boxes."""
+    if len(boxes) == 0:
+        return boxes
+    order = np.argsort(-boxes[:, 4])
+    keep = []
+    for i in order:
+        ok = True
+        for j in keep:
+            xx = max(boxes[i, 0], boxes[j, 0])
+            yy = max(boxes[i, 1], boxes[j, 1])
+            x2 = min(boxes[i, 0] + boxes[i, 2], boxes[j, 0] + boxes[j, 2])
+            y2 = min(boxes[i, 1] + boxes[i, 3], boxes[j, 1] + boxes[j, 3])
+            inter = max(x2 - xx, 0) * max(y2 - yy, 0)
+            union = boxes[i, 2] * boxes[i, 3] + boxes[j, 2] * boxes[j, 3] - inter
+            if union > 0 and inter / union > iou_thresh:
+                ok = False
+                break
+        if ok:
+            keep.append(i)
+        if len(keep) >= top:
+            break
+    return boxes[keep]
+
+
+def bbr(boxes: np.ndarray, deltas: np.ndarray) -> np.ndarray:
+    """Bounding-box regression."""
+    out = boxes.copy()
+    out[:, 0] += deltas[:, 0] * boxes[:, 2]
+    out[:, 1] += deltas[:, 1] * boxes[:, 3]
+    out[:, 2] *= np.exp(np.clip(deltas[:, 2], -1, 1))
+    out[:, 3] *= np.exp(np.clip(deltas[:, 3], -1, 1))
+    return out
+
+
+def image_patch(frame: np.ndarray, boxes: np.ndarray, size: int) -> np.ndarray:
+    """Crop+resize (nearest) patches for the next cascade stage."""
+    H, W = frame.shape[:2]
+    out = np.zeros((max(len(boxes), 1), size, size, 3), frame.dtype)
+    for i, (x, y, w, h, *_rest) in enumerate(boxes):
+        x0, y0 = int(max(x, 0)), int(max(y, 0))
+        x1 = int(min(x + max(w, 1), W))
+        y1 = int(min(y + max(h, 1), H))
+        if x1 <= x0 or y1 <= y0:
+            continue
+        crop = frame[y0:y1, x0:x1]
+        yi = (np.arange(size) * crop.shape[0] // size).clip(0, crop.shape[0] - 1)
+        xi = (np.arange(size) * crop.shape[1] // size).clip(0, crop.shape[1] - 1)
+        out[i] = crop[yi][:, xi]
+    return out
+
+
+def pnet_map_to_boxes(pmap: np.ndarray, scale: float, stride=4, cell=12,
+                      thresh=0.7) -> np.ndarray:
+    """P-Net output map -> candidate boxes at this pyramid scale."""
+    score = 1.0 / (1.0 + np.exp(-pmap[:, :, 0]))
+    ys, xs = np.where(score > thresh)
+    if len(ys) == 0:
+        return np.zeros((0, 5), np.float32)
+    boxes = np.stack([
+        xs * stride / scale, ys * stride / scale,
+        np.full(len(ys), cell / scale), np.full(len(ys), cell / scale),
+        score[ys, xs]], axis=1).astype(np.float32)
+    deltas = pmap[ys, xs, 1:5]
+    return bbr(boxes, deltas)

@@ -1,0 +1,163 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (seconds, per chip — all dry-run numbers are per-device):
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (~50 GB/s ICI)
+
+plus MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Known measurement caveats (documented):
+  * HLO numbers come from 1-/2-period *unrolled* compiles extrapolated
+    linearly (XLA cost analysis visits while bodies once).
+  * per-time-step scans inside SSM/xLSTM chunk bodies are still while
+    loops; an analytic correction adds the missing (ct-1)/ct step work.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+
+def _active_params(cfg) -> float:
+    """Analytic active-parameter count (per token), excluding the
+    embedding gather table but including the LM head matmul."""
+    import jax
+    from repro.models import build_model
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    total -= cfg.vocab_size * cfg.d_model          # embed gather table
+    if cfg.tie_embeddings:
+        total += cfg.vocab_size * cfg.d_model      # reused as head matmul
+    if cfg.moe is not None:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_expert
+        n_moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.n_layers))
+        total -= n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return float(total)
+
+
+def _scan_correction_flops(cfg, shape, n_dev: int) -> float:
+    """Per-device flops for per-step scans XLA counts once per chunk."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return 0.0  # decode has no inner time scans
+    corr = 0.0
+    if cfg.family in ("hybrid",) and cfg.ssm is not None:
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        n_mamba = sum(not cfg.is_attn_layer(i) for i in range(cfg.n_layers))
+        corr += n_mamba * B * S * di * N * 8.0
+    if cfg.family == "ssm":
+        di = 2 * cfg.d_model
+        H = cfg.n_heads
+        dh = di // H
+        every = cfg.ssm.slstm_every or 4
+        n_m = cfg.n_layers - cfg.n_layers // every
+        n_s = cfg.n_layers // every
+        corr += n_m * B * S * H * dh * dh * 6.0          # mlstm C update+read
+        corr += n_s * B * S * (2 * H * dh * 4 * dh)      # slstm R matmul
+    mult = 3.0 if shape.kind == "train" else 1.0         # fwd+bwd
+    return corr * mult / n_dev
+
+
+def load_records(dry_dir: str = "experiments/dryrun") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*__pod1.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def analyse(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    from repro.configs.shapes import SHAPES
+    from repro.launch.specs import resolve_config
+    cfg = resolve_config(rec["arch"], rec["shape"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+
+    flops = rec.get("flops", 0.0) + _scan_correction_flops(cfg, shape, n_dev)
+    bytes_ = rec.get("bytes_accessed", 0.0)
+    coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    n_active = _active_params(cfg)
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * D
+    elif shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * D
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+    model_flops_dev = model_flops / n_dev
+    ratio = model_flops_dev / flops if flops else 0.0
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "extrapolated": bool(rec.get("extrapolated")),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": model_flops_dev, "hlo_flops_dev": flops,
+        "useful_ratio": ratio,
+        "hbm_args_gib": rec.get("argument_size_in_bytes", 0) / 2**30,
+        "hbm_temp_gib": rec.get("temp_size_in_bytes", 0) / 2**30,
+        "coll_detail": rec.get("collectives", {}),
+    }
+
+
+def advice(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.4:
+            return ("compute-bound with low useful ratio: cut remat recompute "
+                    "or replicated attention (head-count vs TP mismatch)")
+        return "compute-bound near model flops: scale chips or quantize"
+    if d == "memory":
+        return ("memory-bound: fuse elementwise chains / raise arithmetic "
+                "intensity (bigger blocks, bf16 accumulators, flash kernels)")
+    return ("collective-bound: re-shard to cut all-gathers (e.g. keep "
+            "activations sharded through residual), overlap collectives "
+            "with compute, or shrink the TP degree")
+
+
+def table(dry_dir: str = "experiments/dryrun") -> List[str]:
+    rows = []
+    out = ["arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+           "model_flops/hlo_flops,hbm_args_GiB,hbm_temp_GiB,cost_basis"]
+    for rec in load_records(dry_dir):
+        r = analyse(rec)
+        if r is None:
+            continue
+        rows.append(r)
+        basis = "extrapolated" if r["extrapolated"] else "raw(scan-undercount)"
+        out.append(
+            f"{r['arch']},{r['shape']},{r['t_compute_s']:.4f},"
+            f"{r['t_memory_s']:.4f},{r['t_collective_s']:.4f},{r['dominant']},"
+            f"{r['useful_ratio']:.3f},{r['hbm_args_gib']:.2f},"
+            f"{r['hbm_temp_gib']:.2f},{basis}")
+    return out
+
+
+def run() -> List[str]:
+    lines = table()
+    return [f"roofline_{i},0.0,{l}" for i, l in enumerate(lines[1:], 1)] \
+        or ["roofline_none,0.0,no dry-run records found"]
+
+
+if __name__ == "__main__":
+    print("\n".join(table()))

@@ -1,0 +1,40 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only e1,e4]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: e1,e2,e3,e4,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import e1_multimodel, e2_ars, e3_mtcnn, e4_overhead, roofline
+    sections = [("e1", e1_multimodel), ("e2", e2_ars), ("e3", e3_mtcnn),
+                ("e4", e4_overhead), ("roofline", roofline)]
+    print("name,us_per_call,derived")
+    failed = False
+    for name, mod in sections:
+        if only and name not in only:
+            continue
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            failed = True
+            print(f"{name}_ERROR,0.0,{traceback.format_exc(limit=3)!r}",
+                  flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""E3's complex topology as a runnable example: MTCNN-style cascade
+with NMS / BBR / image-patch custom filters and an overlay decoder.
+
+    PYTHONPATH=src python examples/mtcnn_cascade.py
+"""
+import sys
+
+sys.path.insert(0, ".")  # for benchmarks.* helpers when run from repo root
+
+import jax
+import numpy as np
+
+from benchmarks.e3_mtcnn import _build_fns
+from repro.core import parse_pipeline
+from repro.core.elements.sources import VideoTestSrc
+
+stages = _build_fns(jax.random.PRNGKey(3))
+pnet_stage, rnet_stage, onet_stage = stages
+
+
+def pnet_f(frame):
+    return frame, pnet_stage(np.asarray(frame))
+
+
+def rnet_f(frame, boxes):
+    return frame, rnet_stage(np.asarray(frame), np.asarray(boxes))
+
+
+def onet_f(frame, boxes):
+    return onet_stage(np.asarray(frame), np.asarray(boxes))
+
+
+pipe = parse_pipeline(
+    "appsrc name=src ! queue ! "
+    "tensor_filter framework=python model=pnet ! queue ! "
+    "tensor_filter framework=python model=rnet ! queue ! "
+    "tensor_filter framework=python model=onet ! "
+    "tensor_decoder mode=bounding_boxes ! tensor_sink name=out keep=true",
+    models={"pnet": pnet_f, "rnet": rnet_f, "onet": onet_f})
+pipe.start()
+
+src = VideoTestSrc("gen", width=160, height=160)
+for i in range(12):
+    pipe["src"].push(src.create(i).data)
+pipe["src"].end_of_stream()
+pipe["out"].eos_seen.wait(timeout=120)
+pipe.stop()
+
+out = pipe["out"]
+print(f"processed {out.n_received} frames through the 3-stage cascade")
+for b in out.buffers[:3]:
+    print(f"  boxes: {b.meta['boxes']}")

@@ -1,0 +1,42 @@
+"""Quickstart: NNStreamer-style pipelines in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import parse_pipeline
+from repro.single import SingleShot
+
+# 1. a textual pipeline, gst-launch style: synthetic camera -> normalize
+#    -> neural network (reduced smollm config as an LM "filter" over pixel
+#    tokens is silly; use the classic classifier demo instead)
+def tiny_classifier(frame):
+    # any callable is a filter backend ("custom python sub-plugin")
+    return np.asarray(frame, np.float32).mean(axis=(0, 1))  # per-channel
+
+pipe = parse_pipeline(
+    "videotestsrc num_buffers=16 width=64 height=64 ! "
+    "tensor_converter to_float=true ! "
+    "tensor_transform option=multiply:2.0,subtract:1.0 ! "
+    "tensor_filter framework=python model=clf ! "
+    "tensor_decoder mode=argmax_label ! tensor_sink name=out keep=true",
+    models={"clf": tiny_classifier})
+pipe.run_until_eos(timeout=30)
+out = pipe["out"]
+print(f"pipeline processed {out.n_received} frames")
+print(f"first result: label={out.buffers[0].meta['label']} "
+      f"(chunk={np.asarray(out.buffers[0].data)})")
+
+# 2. the Single API — one model, no pipeline (paper's Tizen/Android API)
+single = SingleShot(fn=tiny_classifier)
+print("single-shot:", single.invoke(np.ones((4, 4, 3), np.uint8)))
+
+# 3. branching + value-based flow control, still one textual description
+pipe2 = parse_pipeline(
+    "sensorsrc num_buffers=32 channels=4 ! tee name=t num_src_pads=2 "
+    "t.src_0 ! queue ! tensor_aggregator frames_in=4 ! fakesink name=agg "
+    "t.src_1 ! queue ! tensor_if name=gate reduction=max compare=gt value=0.8 "
+    "gate.src_true ! fakesink name=hot gate.src_false ! fakesink name=cold")
+pipe2.run_until_eos(timeout=30)
+print(f"aggregated windows: {pipe2['agg'].n_received}, "
+      f"hot: {pipe2['hot'].n_received}, cold: {pipe2['cold'].n_received}")

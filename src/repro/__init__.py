@@ -1,0 +1,3 @@
+"""repro — NNStreamer reproduced as a JAX stream-pipeline framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,78 @@
+"""Checkpointing: pytree <-> sharded .npz files.
+
+Layout: <dir>/step_<n>/part_<i>.npz plus a manifest of the tree
+structure.  Leaves are gathered to host; save is chunked so a single
+file stays under ``max_bytes_per_part`` (mirrors real multi-host
+checkpoint sharding at laptop scale).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    named = [(f"leaf_{i}", np.asarray(x)) for i, x in enumerate(leaves)]
+    return named, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree,
+                    max_bytes_per_part: int = 512 * 1024 * 1024) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    named, treedef = _flatten(tree)
+    parts: List[List[Tuple[str, np.ndarray]]] = [[]]
+    size = 0
+    for name, arr in named:
+        if size + arr.nbytes > max_bytes_per_part and parts[-1]:
+            parts.append([])
+            size = 0
+        parts[-1].append((name, arr))
+        size += arr.nbytes
+    index = {}
+    for i, group in enumerate(parts):
+        np.savez(os.path.join(path, f"part_{i}.npz"), **dict(group))
+        for name, _ in group:
+            index[name] = i
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"n_leaves": len(named), "index": index,
+                   "treedef": str(treedef)}, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like):
+    """Restore into the structure of ``like`` (validates leaf count/shape)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    files = {}
+    arrays = {}
+    for name, part in manifest["index"].items():
+        if part not in files:
+            files[part] = np.load(os.path.join(path, f"part_{part}.npz"))
+        arrays[name] = files[part][name]
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(f"checkpoint has {manifest['n_leaves']} leaves, "
+                         f"target tree has {len(leaves)}")
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = arrays[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf_{i} shape {arr.shape} != {ref.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,114 @@
+"""TensorFilter — the neural network as an atomic pipeline filter.
+
+The NNFW sub-plugin structure of the paper maps to *backends*:
+
+  * ``python``      — arbitrary callable (the custom-C/Python sub-plugin)
+  * ``jax``         — jax.jit compiled callable placed on a device
+  * ``jax-sharded`` — pjit'd callable on a Mesh with in/out shardings
+                      (the NPU / accelerator-delegation analogue)
+
+A filter is resolved either from a direct ``fn`` or from the model
+registry (``model="glm4-9b"``), which mirrors loading a .tflite/.snpe
+artifact by path.  Filters keep per-invocation latency statistics so
+benchmarks can report per-stage numbers like the paper's Table II.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..element import Element, Pad
+from ..stream import Buffer
+
+
+class TensorFilter(Element):
+    def __init__(self, name: str, fn: Optional[Callable] = None,
+                 model: Optional[str] = None, framework: str = "python",
+                 device=None, mesh=None, in_shardings=None, out_shardings=None,
+                 outputs_meta_key: Optional[str] = None):
+        super().__init__(name)
+        self.add_sink_pad()
+        self.add_src_pad()
+        self.framework = framework
+        self.model_name = model
+        self._raw_fn = fn
+        self._device = device
+        self._mesh = mesh
+        self._in_shardings = in_shardings
+        self._out_shardings = out_shardings
+        self._compiled: Optional[Callable] = None
+        self.outputs_meta_key = outputs_meta_key
+        # latency stats (paper Table II rows 3-5)
+        self.n_invocations = 0
+        self.total_latency_s = 0.0
+
+    # -- backend resolution -------------------------------------------------
+    def _resolve(self) -> Callable:
+        if self._compiled is not None:
+            return self._compiled
+        fn = self._raw_fn
+        if fn is None:
+            if self.model_name is None:
+                raise ValueError(f"{self.name}: TensorFilter needs fn= or model=")
+            from ...registry import get_model
+            fn = get_model(self.model_name)
+        if self.framework == "python":
+            self._compiled = fn
+        elif self.framework == "jax":
+            import jax
+            jitted = jax.jit(fn)
+            if self._device is not None:
+                dev = self._device
+
+                def run(*args):
+                    args = [jax.device_put(a, dev) for a in args]
+                    return jitted(*args)
+                self._compiled = run
+            else:
+                self._compiled = jitted
+        elif self.framework == "jax-sharded":
+            import jax
+            self._compiled = jax.jit(fn, in_shardings=self._in_shardings,
+                                     out_shardings=self._out_shardings)
+        else:
+            raise ValueError(f"unknown TensorFilter framework {self.framework!r}")
+        return self._compiled
+
+    # -- invocation -----------------------------------------------------------
+    def invoke(self, chunks: Sequence[Any]) -> Tuple[Any, ...]:
+        fn = self._resolve()
+        t0 = time.perf_counter()
+        if self.framework.startswith("jax"):
+            import jax
+            ctx = self._mesh if self._mesh is not None else _nullcontext()
+            with ctx:
+                out = fn(*chunks)
+            out = jax.block_until_ready(out)
+        else:
+            out = fn(*chunks)
+        self.total_latency_s += time.perf_counter() - t0
+        self.n_invocations += 1
+        if isinstance(out, (tuple, list)):
+            return tuple(out)
+        return (out,)
+
+    def transform(self, pad: Pad, buf: Buffer) -> Optional[Buffer]:
+        out_chunks = self.invoke(buf.chunks)
+        new = buf.with_chunks(out_chunks)
+        if self.outputs_meta_key:
+            new.meta[self.outputs_meta_key] = out_chunks
+        return new
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.total_latency_s / max(self.n_invocations, 1)
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False

@@ -1,0 +1,91 @@
+"""Queue — the thread boundary that creates pipeline parallelism.
+
+Matches GStreamer queue semantics that matter for the paper's results:
+a queue decouples the upstream thread from downstream processing, so
+stages before and after it execute concurrently (pipeline parallelism,
+E1/E3).  Supports bounded capacity with either blocking or leaky
+behaviour (``leaky=downstream`` drops the newest, ``leaky=upstream``
+drops the oldest — used for QoS like the paper's live pipelines).
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+from typing import Optional
+
+from ..element import Element, Pad
+from ..stream import Buffer
+
+
+class Queue(Element):
+    def __init__(self, name: str, max_size: int = 16, leaky: str = "no"):
+        super().__init__(name)
+        if leaky not in ("no", "upstream", "downstream"):
+            raise ValueError(f"leaky must be no|upstream|downstream, got {leaky!r}")
+        self.max_size = int(max_size)
+        self.leaky = leaky
+        self.add_sink_pad()
+        self.add_src_pad()
+        self._q: _queue.Queue = _queue.Queue(maxsize=self.max_size)
+        self._worker: Optional[threading.Thread] = None
+        self._running = False
+        self.n_dropped = 0
+
+    # -- upstream side ------------------------------------------------------
+    def chain(self, pad: Pad, buf: Buffer) -> None:
+        if not self._running:
+            return
+        if buf.eos:
+            self._q.put(buf)  # EOS always enqueues (blocks if full)
+            return
+        if self.leaky == "downstream":
+            try:
+                self._q.put_nowait(buf)
+            except _queue.Full:
+                self.n_dropped += 1  # drop newest
+        elif self.leaky == "upstream":
+            while True:
+                try:
+                    self._q.put_nowait(buf)
+                    return
+                except _queue.Full:
+                    try:
+                        self._q.get_nowait()  # drop oldest
+                        self.n_dropped += 1
+                    except _queue.Empty:
+                        pass
+        else:
+            self._q.put(buf)  # block upstream (backpressure)
+
+    # -- downstream side ------------------------------------------------------
+    def _run(self) -> None:
+        while self._running:
+            try:
+                buf = self._q.get(timeout=0.1)
+            except _queue.Empty:
+                continue
+            try:
+                self.srcpad.push(buf)
+            except BaseException as exc:  # noqa: BLE001 - bus-reported
+                self.post_error(exc)
+                return
+            if buf.eos:
+                return
+
+    def start(self) -> None:
+        self._running = True
+        self._worker = threading.Thread(target=self._run, name=f"queue:{self.name}",
+                                        daemon=True)
+        self._worker.start()
+
+    def stop(self) -> None:
+        self._running = False
+        if self._worker is not None:
+            self._worker.join(timeout=2.0)
+            self._worker = None
+        # drain
+        while True:
+            try:
+                self._q.get_nowait()
+            except _queue.Empty:
+                break

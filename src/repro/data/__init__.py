@@ -1,0 +1,3 @@
+from .pipeline import TokenStream, synthetic_batches, lm_batch_specs
+
+__all__ = ["TokenStream", "synthetic_batches", "lm_batch_specs"]

@@ -1,0 +1,89 @@
+"""Pallas TPU decode attention: flash-decoding style split-K.
+
+One new token attends to a long KV cache (the decode_32k / long_500k hot
+path).  Grid (B, H, n_kblocks): KV blocks stream HBM->VMEM while running
+(m, l, acc) stay in VMEM scratch; the valid-length mask comes from a
+scalar operand.  q is tiny ((1, hd) per head) so arithmetic intensity is
+memory-bound by design — the kernel's job is to keep the KV stream at
+HBM bandwidth, which on TPU means (block_k x hd) tiles with hd on lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale, block_k, n_k):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[0], s, NEG)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    m_ref[0, 0] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 512,
+                     interpret: bool = True):
+    """q: (B,H,hd); caches: (B,KV,C,hd); length: () int32 -> (B,H,hd)."""
+    B, H, hd = q.shape
+    KV, C = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(block_k, C)
+    n_k = C // bk
+    scale = 1.0 / np.sqrt(hd)
+    grid = (B, H, n_k)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=bk, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik, ln: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik, ln: (b, h // G, ik, 0)),
+                pl.BlockSpec((1, 1, bk, hd), lambda b, h, ik, ln: (b, h // G, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik, ln: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(length, q[:, :, None, :], k_cache, v_cache)
+    return out[:, :, 0, :]

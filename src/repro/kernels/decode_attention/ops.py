@@ -1,0 +1,23 @@
+"""Public op: decode attention in model-native layout with padding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import decode_attention
+
+
+def decode_attention_bhd(q, k_cache, v_cache, length, *, block_k: int = 512,
+                         interpret: bool = True):
+    """q: (B,1,H,hd); caches: (B,C,KV,hd) -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    C = k_cache.shape[1]
+    bk = min(block_k, C)
+    pad = (-C) % bk
+    kt = jnp.moveaxis(k_cache, 2, 1)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+    if pad:  # padded slots are masked by the length check (length <= C)
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    o = decode_attention(q[:, 0], kt, vt, length, block_k=bk,
+                         interpret=interpret)
+    return o[:, None]

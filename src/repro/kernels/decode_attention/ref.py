@@ -1,0 +1,24 @@
+"""Oracle: single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q: (B,H,hd); caches: (B,KV,C,hd); length: scalar valid prefix.
+
+    Returns (B,H,hd).
+    """
+    B, H, hd = q.shape
+    KV, C = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k_cache).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    valid = jnp.arange(C)[None, None, None, :] < length
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v_cache)
+    return o.reshape(B, H, hd)

@@ -1,0 +1,33 @@
+"""Public op: layout adaptation (B,S,H,hd) <-> kernel layout, padding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True,
+                         sliding_window: int = 0, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) — model-native layout."""
+    S = q.shape[1]
+    T = k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    pad_q = (-S) % bq
+    pad_k = (-T) % bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys sit at positions >= T; the causal mask (kpos<=qpos
+        # with qpos<S<=kpos) would keep them for the padded q rows only,
+        # which are discarded — but for safety give them NEG via window
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    o = flash_attention(qt, kt, vt, causal=causal,
+                        sliding_window=sliding_window,
+                        block_q=bq, block_k=bk, interpret=interpret)
+    return jnp.moveaxis(o[:, :, :S], 1, 2)

@@ -1,0 +1,26 @@
+"""Oracle: causal (optionally sliding-window) GQA attention, pure jnp."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sliding_window: int = 0):
+    """q: (B,H,S,hd); k,v: (B,KV,T,hd) -> (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window:
+        mask &= kpos > qpos - sliding_window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v)
+    return o.reshape(B, H, S, hd)

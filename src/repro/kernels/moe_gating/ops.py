@@ -1,0 +1,25 @@
+"""Public op: shape-agnostic fused top-k gating."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import gating_topk
+
+
+def topk(scores, k: int, *, interpret: bool = True):
+    """scores: (..., E) -> (vals (...,k), idx (...,k))."""
+    shape = scores.shape
+    E = shape[-1]
+    flat = scores.reshape(-1, E)
+    T = flat.shape[0]
+    bt = 512
+    pad = (-T) % bt if T > bt else 0
+    if T < bt:
+        bt = max(8, 1 << (T - 1).bit_length()) if T > 8 else 8
+        pad = (-T) % bt
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)), constant_values=-1e30)
+    vals, idx = gating_topk(flat, k, block_t=bt, interpret=interpret)
+    vals, idx = vals[:T], idx[:T]
+    return (vals.reshape(shape[:-1] + (k,)).astype(scores.dtype),
+            idx.reshape(shape[:-1] + (k,)))

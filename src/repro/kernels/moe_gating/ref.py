@@ -1,0 +1,9 @@
+"""Oracle: top-k over the expert axis (values + indices, sorted desc)."""
+from __future__ import annotations
+
+import jax
+
+
+def topk_ref(scores, k: int):
+    """scores: (T, E) -> (vals (T,k), idx (T,k))."""
+    return jax.lax.top_k(scores, k)

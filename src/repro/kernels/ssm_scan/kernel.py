@@ -1,0 +1,87 @@
+"""Pallas TPU selective scan (Mamba S6).
+
+TPU adaptation of the CUDA selective-scan: grid (B, n_d, n_t) with the
+time dim innermost-sequential; the recurrent state h (block_d, N) lives
+in VMEM scratch across time chunks, dt/x/B/C stream in per-chunk.  The
+within-chunk loop is a `fori_loop` over rows — sublane-indexed VMEM
+reads, VPU elementwise updates, one (block_d, N) state per core.  This
+replaces warp-level shuffles with VMEM-resident state, trading GPU
+shared-memory tricks for TPU's large vector memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_out_ref,
+                h_ref, *, chunk_t, n_t):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)                     # (bd, N)
+    Dp = d_ref[...].astype(jnp.float32)                    # (1, bd)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)         # (bd,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)           # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        decay = jnp.exp(dt_t[:, None] * A)                 # (bd, N)
+        drive = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = decay * h + drive
+        y = jnp.sum(h * c_t[None, :], axis=1) + Dp[0] * x_t
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk_t, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(it == n_t - 1)
+    def _emit_state():
+        h_out_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk_t", "interpret"))
+def selective_scan_kernel(dt, xs, Bc, Cc, A, D, *, block_d: int = 128,
+                          chunk_t: int = 256, interpret: bool = True):
+    """dt, xs: (B,S,di); Bc, Cc: (B,S,N); A: (di,N); D: (di,).
+
+    S % chunk_t == 0 and di % block_d == 0 (ops.py pads).
+    Returns (y (B,S,di), h_last (B,di,N) f32).
+    """
+    B, S, di = xs.shape
+    N = Bc.shape[-1]
+    bd = min(block_d, di)
+    ct = min(chunk_t, S)
+    n_d, n_t = di // bd, S // ct
+    grid = (B, n_d, n_t)
+    D2 = D.reshape(1, di)
+    y, h_last = pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk_t=ct, n_t=n_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ct, bd), lambda b, id_, it: (b, it, id_)),  # dt
+            pl.BlockSpec((1, ct, bd), lambda b, id_, it: (b, it, id_)),  # x
+            pl.BlockSpec((1, ct, N), lambda b, id_, it: (b, it, 0)),     # B
+            pl.BlockSpec((1, ct, N), lambda b, id_, it: (b, it, 0)),     # C
+            pl.BlockSpec((bd, N), lambda b, id_, it: (id_, 0)),          # A
+            pl.BlockSpec((1, bd), lambda b, id_, it: (0, id_)),          # D
+        ],
+        out_specs=(
+            pl.BlockSpec((1, ct, bd), lambda b, id_, it: (b, it, id_)),  # y
+            pl.BlockSpec((1, bd, N), lambda b, id_, it: (b, id_, 0)),    # h_last
+        ),
+        out_shape=(jax.ShapeDtypeStruct((B, S, di), xs.dtype),
+                   jax.ShapeDtypeStruct((B, di, N), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, xs, Bc, Cc, A, D2)
+    return y, h_last

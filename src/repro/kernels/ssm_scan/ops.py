@@ -1,0 +1,33 @@
+"""Public op: padding + dtype handling for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import selective_scan_kernel
+
+
+def selective_scan(dt, Bc, Cc, xs, A, D, h0=None, *, block_d: int = 128,
+                   chunk_t: int = 256, interpret: bool = True):
+    """Same contract as models.mamba.selective_scan (h0 must be None —
+    prefill starts cold; decode uses the single-step jnp path)."""
+    assert h0 is None, "kernel path supports cold start only"
+    B, S, di = xs.shape
+    bd = min(block_d, di)
+    ct = min(chunk_t, S)
+    pad_d = (-di) % bd
+    pad_t = (-S) % ct
+    if pad_d:
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad_d)))
+        xs = jnp.pad(xs, ((0, 0), (0, 0), (0, pad_d)))
+        A = jnp.pad(A, ((0, pad_d), (0, 0)))
+        D = jnp.pad(D, (0, pad_d))
+    if pad_t:
+        dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+        xs = jnp.pad(xs, ((0, 0), (0, pad_t), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad_t), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad_t), (0, 0)))
+    y, h_last = selective_scan_kernel(dt, xs, Bc, Cc, A, D, block_d=bd,
+                                      chunk_t=ct, interpret=interpret)
+    y = y[:, :S, :di]
+    h_last = h_last[:, :di]
+    return y, h_last

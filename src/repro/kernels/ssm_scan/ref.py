@@ -1,0 +1,26 @@
+"""Oracle: Mamba selective scan, sequential jnp reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, Bc, Cc, xs, A, D, h0=None):
+    """dt, xs: (B,S,di); Bc, Cc: (B,S,N); A: (di,N); D: (di,).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t + D x_t.
+    Returns (y (B,S,di) in xs.dtype, h_last (B,di,N) f32).
+    """
+    B, S, di = xs.shape
+    N = Bc.shape[-1]
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * A[None, None])
+    drive = (dt32 * xs.astype(jnp.float32))[..., None] * \
+        Bc.astype(jnp.float32)[..., None, :]
+    h = jnp.zeros((B, di, N), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(S):
+        h = decay[:, t] * h + drive[:, t]
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cc[:, t].astype(jnp.float32)))
+    y = jnp.stack(ys, axis=1) + D[None, None] * xs.astype(jnp.float32)
+    return y.astype(xs.dtype), h

@@ -1,0 +1,48 @@
+"""Public op: shape-agnostic fused transform (pads/tiles to kernel layout)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import LANE, SUBLANE, fused_transform_2d
+from .ref import fused_transform_ref
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bias", "lo", "hi",
+                                             "out_dtype"))
+def fused_transform_xla(x, *, scale=1.0, bias=0.0, lo=-np.inf, hi=np.inf,
+                        out_dtype=None):
+    """Single-pass fused affine+clamp+cast compiled by XLA — the CPU
+    wall-clock proxy for the Pallas kernel (which targets TPU and is
+    validated in interpret mode)."""
+    y = x.astype(jnp.float32) * scale + bias
+    y = jnp.clip(y, lo, hi)
+    return y.astype(out_dtype or x.dtype)
+
+
+def fused_transform(x, *, scale: float = 1.0, bias: float = 0.0,
+                    lo: float = -np.inf, hi: float = np.inf,
+                    out_dtype=None, interpret: bool = True):
+    """Arbitrary-shape fused affine+clamp+cast via the Pallas kernel."""
+    x = jnp.asarray(x)
+    out_dtype = jnp.dtype(out_dtype) if out_dtype else x.dtype
+    n = x.size
+    if n == 0:
+        return x.astype(out_dtype)
+    cols = LANE
+    rows = -(-n // cols)
+    block_rows = 256
+    # pad rows to a multiple of the grid block (grid must tile exactly)
+    quantum = block_rows if rows > block_rows else SUBLANE
+    rows_pad = -(-rows // quantum) * quantum
+    flat = jnp.ravel(x)
+    flat = jnp.pad(flat, (0, rows_pad * cols - n))
+    y = fused_transform_2d(flat.reshape(rows_pad, cols), scale=scale,
+                           bias=bias, lo=float(lo), hi=float(hi),
+                           out_dtype=out_dtype, block_rows=block_rows,
+                           interpret=interpret)
+    return jnp.ravel(y)[:n].reshape(x.shape)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused Tensor-Transform affine chain."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_transform_ref(x, scale: float, bias: float, lo: float, hi: float,
+                        out_dtype=None):
+    """y = cast(clamp(x*scale + bias, lo, hi))  — one logical pass."""
+    y = x.astype(jnp.float32) * scale + bias
+    y = jnp.clip(y, lo, hi)
+    return y.astype(out_dtype or x.dtype)

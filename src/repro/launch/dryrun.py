@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+MUST be run as a module entry point (the XLA flag above executes before
+any jax import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Prints compiled.memory_analysis() / cost_analysis() and writes a JSON
+record (FLOPs, bytes, per-collective bytes, per-device memory) to
+experiments/dryrun/ for the roofline analysis.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS
+from ..configs.shapes import SHAPES
+from .mesh import make_production_mesh
+from .specs import SKIPS, make_step_for_shape
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+_SHAPE_RE = re.compile(r"\b(pred|u8|s8|u16|s16|u32|s32|u64|s64|bf16|f16|f32|f64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo_text: str):
+    """Per-collective operand bytes from post-SPMD HLO.
+
+    Operand types are not printed inline, so bytes derive from the result
+    type + replica-group size: all-gather operand = result/G; all-reduce
+    and all-to-all operand = result; reduce-scatter operand = result*G.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(?:-start)?\(",
+                      stripped)
+        if not m or re.search(r"(all-\w+|collective-permute)-done\(", stripped):
+            continue
+        kind = m.group(2)
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(m.group(1)))
+        if result_bytes == 0:
+            continue
+        g = _group_size(stripped)
+        if kind == "all-gather":
+            op_bytes = result_bytes // max(g, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = result_bytes * g
+        else:  # all-reduce, all-to-all, collective-permute
+            op_bytes = result_bytes
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += op_bytes
+    return out
+
+
+def _compile_and_measure(arch, shape_name, mesh, cfg=None, unroll=False,
+                         model_opts=None):
+    step, ins, ins_sh, out_sh, model, rcfg = make_step_for_shape(
+        arch, shape_name, mesh, cfg=cfg, unroll=unroll, model_opts=model_opts)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=ins_sh,
+                          out_shardings=out_sh).lower(*ins)
+        compiled = lowered.compile()
+    rec = {}
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+    cost = compiled.cost_analysis()
+    if cost:
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(cost.get("transcendentals", 0.0))
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+    except Exception as exc:  # noqa: BLE001
+        rec["collectives_error"] = repr(exc)
+    return rec, rcfg
+
+
+def _extrapolate(c1, c2, n_periods):
+    """cost(n) = cost(1 period) + (n-1) * per-period delta.
+
+    XLA's HloCostAnalysis visits while bodies ONCE, so a scanned layer
+    stack is undercounted by its trip count; compiling 1- and 2-period
+    variants recovers the true totals (flops / bytes / collectives).
+    """
+    out = {}
+    for k in ("flops", "bytes_accessed", "transcendentals"):
+        if k in c1 and k in c2:
+            out[k] = c1[k] + (n_periods - 1) * (c2[k] - c1[k])
+    if "collectives" in c1 and "collectives" in c2:
+        coll = {}
+        for kind in COLLECTIVES:
+            a, b = c1["collectives"][kind], c2["collectives"][kind]
+            coll[kind] = {
+                "count": a["count"] + (n_periods - 1) * (b["count"] - a["count"]),
+                "bytes": a["bytes"] + (n_periods - 1) * (b["bytes"] - a["bytes"]),
+            }
+        out["collectives"] = coll
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            verbose: bool = True, extrapolate: bool = True) -> dict:
+    from ..launch.specs import n_periods_of, reduced_period_cfg, resolve_config
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": list(mesh.devices.shape), "multi_pod": multi_pod,
+           "n_devices": mesh.devices.size, "status": "ok"}
+    t0 = time.time()
+    try:
+        if (arch, shape_name) in SKIPS:
+            rec["status"] = "skip"
+            rec["reason"] = SKIPS[(arch, shape_name)]
+            return _finish(rec, out_dir, tag, t0, verbose)
+        full, cfg = _compile_and_measure(arch, shape_name, mesh)
+        rec.update(full)
+        rec["raw_flops"] = full.get("flops")
+        rec["extrapolated"] = False
+        if extrapolate:
+            n = n_periods_of(cfg)
+            rec["n_periods"] = n
+            if n > 2:
+                # unrolled reduced variants: every layer/chunk in the HLO,
+                # so per-period deltas are true costs
+                c1, _ = _compile_and_measure(arch, shape_name, mesh,
+                                             cfg=reduced_period_cfg(cfg, 1),
+                                             unroll=True)
+                c2, _ = _compile_and_measure(arch, shape_name, mesh,
+                                             cfg=reduced_period_cfg(cfg, 2),
+                                             unroll=True)
+                rec.update(_extrapolate(c1, c2, n))
+                rec["extrapolated"] = True
+    except Exception as exc:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = repr(exc)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _finish(rec, out_dir, tag, t0, verbose)
+
+
+def _finish(rec, out_dir, tag, t0, verbose):
+    rec["wall_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "ok":
+            coll = rec.get("collectives", {})
+            cbytes = sum(v["bytes"] for v in coll.values())
+            print(f"[OK]   {tag}: flops={rec.get('flops', 0):.3e} "
+                  f"bytes={rec.get('bytes_accessed', 0):.3e} "
+                  f"coll={cbytes:.3e}B "
+                  f"args={rec.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"wall={rec['wall_s']}s", flush=True)
+        elif rec["status"] == "skip":
+            print(f"[SKIP] {tag}: {rec['reason']}", flush=True)
+        else:
+            print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the 1/2-period cost extrapolation compiles")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip combos whose JSON already has status ok/skip")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in combos:
+        if args.skip_existing:
+            tag = f"{a}__{s}__{'pod2' if mp else 'pod1'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    old = json.load(f)
+                good = old.get("status") in ("ok", "skip")
+                if good and (args.no_extrapolate or old.get("extrapolated")
+                             or old.get("status") == "skip"
+                             or old.get("n_periods", 99) <= 2):
+                    n_ok += old["status"] == "ok"
+                    n_skip += old["status"] == "skip"
+                    print(f"[CACHED] {tag}", flush=True)
+                    continue
+        rec = run_one(a, s, mp, args.out, extrapolate=not args.no_extrapolate)
+        n_ok += rec["status"] == "ok"
+        n_skip += rec["status"] == "skip"
+        n_fail += rec["status"] == "fail"
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"of {len(combos)}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

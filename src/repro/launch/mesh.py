@@ -1,0 +1,25 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module
+never touches jax device state (the dry-run sets the host-device-count
+flag before any jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16x16 = 256 chips/pod; 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The FSDP/batch axes of a mesh (everything except "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")

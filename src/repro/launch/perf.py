@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Measures the three roofline terms for one (arch x shape) under a set of
+optimization knobs, via the same extrapolated-compile methodology as the
+dry-run:
+
+    PYTHONPATH=src python -m repro.launch.perf --arch deepseek-v3-671b \
+        --shape train_4k --tag chunk2048 --attn-chunk 2048
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from ..configs import ARCH_IDS
+from ..configs.shapes import SHAPES
+from .dryrun import COLLECTIVES, _compile_and_measure, _extrapolate
+from .mesh import make_production_mesh
+from .specs import n_periods_of, reduced_period_cfg, resolve_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def measure(arch: str, shape_name: str, *, model_opts=None, cfg_edit=None,
+            multi_pod: bool = False, full_compile: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = resolve_config(arch, shape_name)
+    if cfg_edit:
+        cfg = cfg_edit(cfg)
+    n = n_periods_of(cfg)
+    rec = {}
+    if full_compile:  # memory analysis needs the full scanned program
+        full, _ = _compile_and_measure(arch, shape_name, mesh, cfg=cfg,
+                                       model_opts=model_opts)
+        rec.update({k: full[k] for k in ("argument_size_in_bytes",
+                                         "temp_size_in_bytes") if k in full})
+    c1, _ = _compile_and_measure(arch, shape_name, mesh,
+                                 cfg=reduced_period_cfg(cfg, 1), unroll=True,
+                                 model_opts=model_opts)
+    c2, _ = _compile_and_measure(arch, shape_name, mesh,
+                                 cfg=reduced_period_cfg(cfg, 2), unroll=True,
+                                 model_opts=model_opts)
+    rec.update(_extrapolate(c1, c2, n))
+    coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+    rec["t_compute_s"] = rec.get("flops", 0) / PEAK_FLOPS
+    rec["t_memory_s"] = rec.get("bytes_accessed", 0) / HBM_BW
+    rec["t_collective_s"] = coll / LINK_BW
+    rec["dominant"] = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+                          key=lambda k: rec[k])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=tuple(SHAPES), required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--acc-bf16", action="store_true")
+    ap.add_argument("--probs-bf16", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--flat-dp", action="store_true",
+                    help="use the model axis as extra data parallelism")
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--sliding-window", type=int, default=-1)
+    ap.add_argument("--full-compile", action="store_true",
+                    help="also run the scanned compile for memory analysis")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    model_opts = {}
+    if args.attn_chunk:
+        model_opts["attn_chunk"] = args.attn_chunk
+    if args.acc_bf16:
+        model_opts["acc_bf16"] = True
+    if args.probs_bf16:
+        model_opts["probs_bf16"] = True
+    if args.seq_parallel:
+        model_opts["seq_parallel"] = True
+    if args.mla_absorb:
+        model_opts["mla_absorb"] = True
+    if args.flat_dp:
+        model_opts["flat_dp"] = True
+
+    def cfg_edit(cfg):
+        if args.capacity_factor and cfg.moe:
+            cfg = cfg.replace(moe=dataclasses.replace(
+                cfg.moe, capacity_factor=args.capacity_factor))
+        if args.sliding_window >= 0:
+            cfg = cfg.replace(sliding_window=args.sliding_window)
+        return cfg
+
+    t0 = time.time()
+    rec = measure(args.arch, args.shape, model_opts=model_opts,
+                  cfg_edit=cfg_edit, full_compile=args.full_compile)
+    rec.update({"arch": args.arch, "shape": args.shape, "tag": args.tag,
+                "model_opts": model_opts, "wall_s": round(time.time() - t0, 1)})
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{args.tag}] compute={rec['t_compute_s']:.3f}s "
+          f"memory={rec['t_memory_s']:.3f}s "
+          f"collective={rec['t_collective_s']:.3f}s "
+          f"dominant={rec['dominant']} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — plus the sharding
+trees for params / optimizer state / caches / batches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.shapes import SHAPES, InputShape
+from ..models import build_model
+from ..models.config import ModelConfig
+from ..models.frontends import audio_frames_shape, vision_patches_shape
+from ..models.sharding import cache_specs, param_specs
+from ..optim import adamw_init
+from ..training.trainer import TrainState, make_train_step
+from .mesh import dp_axes
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+# dense/VLM archs run long_500k only with this sliding window (DESIGN.md)
+LONG_CONTEXT_WINDOW = 8192
+
+# whisper-tiny is a full-attention enc-dec: long_500k is skipped
+SKIPS = {("whisper-tiny", "long_500k"): "full-attention enc-dec; 500k decode out of envelope"}
+
+
+def resolve_config(arch: str, shape_name: str, smoke: bool = False) -> ModelConfig:
+    cfg = get_config(arch, smoke=smoke)
+    if shape_name == "long_500k" and cfg.family in ("dense", "vlm"):
+        cfg = cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    if cfg.family == "audio" and SHAPES[shape_name].kind in ("train", "prefill"):
+        # decoder learned-pos table must cover the full seq (DESIGN.md)
+        cfg = cfg.replace(max_seq=max(cfg.max_seq, SHAPES[shape_name].seq_len))
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Training-batch ShapeDtypeStructs (tokens/labels [+frontend embeds])."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": ShapeDtypeStruct((B, S), jnp.int32)}
+    emb = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    if cfg.family == "audio":
+        specs["extra_embeds"] = ShapeDtypeStruct(audio_frames_shape(cfg, B), emb)
+    elif cfg.vision_seq:
+        specs["extra_embeds"] = ShapeDtypeStruct(vision_patches_shape(cfg, B), emb)
+    return specs
+
+
+def batch_shardings(mesh, specs, dp=None) -> Dict[str, Any]:
+    dp = dp or dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    def sh(leaf):
+        spec = (dpa,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(sh, specs)
+
+
+def state_structs_and_shardings(model, mesh, opt_dtype=jnp.bfloat16, dp=None):
+    """eval_shape the TrainState and build its sharding tree."""
+    dp = dp or dp_axes(mesh)
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_s, dp=dp, axis_sizes=_axis_sizes(mesh))
+    state_s = jax.eval_shape(
+        lambda p: TrainState(p, adamw_init(p, state_dtype=opt_dtype)), params_s)
+    # optimizer m/v mirror param specs; step replicated
+    state_specs = TrainState(
+        params=pspecs,
+        opt=type(state_s.opt)(step=P(), m=pspecs, v=pspecs))
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
+    return state_s, shardings
+
+
+def cache_structs_and_shardings(model, mesh, batch: int, capacity: int,
+                                cache_dtype=jnp.bfloat16, dp=None):
+    dp = dp or dp_axes(mesh)
+    cache_s = jax.eval_shape(
+        lambda: model.init_cache(batch, capacity, dtype=cache_dtype))
+    cspecs = cache_specs(cache_s, dp=dp, shard_seq_when_batch1=(batch == 1),
+                         axis_sizes=_axis_sizes(mesh))
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    return cache_s, shardings
+
+
+def reduced_period_cfg(cfg: ModelConfig, p: int) -> ModelConfig:
+    """Same config with the scanned stack cut to ``p`` periods (used to
+    extrapolate cost_analysis past XLA's count-while-body-once)."""
+    if cfg.family in ("dense", "vlm"):
+        return cfg.replace(n_layers=p)
+    if cfg.family == "moe":
+        return cfg.replace(n_layers=cfg.moe.first_dense_layers + p)
+    if cfg.family == "hybrid":
+        return cfg.replace(n_layers=cfg.attn_layer_period * p)
+    if cfg.family == "ssm":
+        every = cfg.ssm.slstm_every or 4
+        return cfg.replace(n_layers=every * p)
+    if cfg.family == "audio":
+        return cfg.replace(n_layers=p, n_enc_layers=p)
+    raise ValueError(cfg.family)
+
+
+def n_periods_of(cfg: ModelConfig) -> int:
+    from ..models.transformer import layer_pattern
+    if cfg.family == "audio":
+        return cfg.n_layers  # enc and dec stacks both scan n_layers
+    _, _, n = layer_pattern(cfg)
+    return n
+
+
+def make_step_for_shape(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+                        cfg: Optional[ModelConfig] = None, unroll: bool = False,
+                        model_opts: Optional[dict] = None):
+    """Builds (step_fn, in_specs, in_shardings, out_shardings) for lowering.
+
+    step kinds: train -> train_step(state, batch); prefill ->
+    prefill(params, tokens[, embeds]); decode -> decode_step(params,
+    cache, token, pos).
+    """
+    if (arch, shape_name) in SKIPS:
+        raise ValueError(f"skip: {SKIPS[(arch, shape_name)]}")
+    shape = SHAPES[shape_name]
+    if cfg is None:
+        cfg = resolve_config(arch, shape_name, smoke=smoke)
+    model_opts = dict(model_opts or {})
+    # flat_dp: treat the whole mesh as data parallelism (small archs whose
+    # head counts don't divide the TP axis — params replicate over "model")
+    flat_dp = model_opts.pop("flat_dp", False)
+    model = build_model(cfg, remat=(shape.kind == "train"), unroll=unroll,
+                        **model_opts)
+    dp = tuple(mesh.axis_names) if flat_dp else dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    if shape.kind == "train":
+        specs = batch_specs(cfg, shape)
+        state_s, state_sh = state_structs_and_shardings(model, mesh, dp=dp)
+        batch_sh = batch_shardings(mesh, specs, dp=dp)
+        step = make_train_step(model)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "lr": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+        return (step, (state_s, specs), (state_sh, batch_sh),
+                (state_sh, metrics_sh), model, cfg)
+
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_s, dp=dp, axis_sizes=_axis_sizes(mesh))
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), params_s and pspecs)
+
+    B, S = shape.global_batch, shape.seq_len
+    emb_dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "prefill":
+        tokens = ShapeDtypeStruct((B, S), jnp.int32)
+        tokens_sh = NamedSharding(mesh, P(dpa, None))
+        extra = None
+        extra_sh = None
+        if cfg.family == "audio":
+            extra = ShapeDtypeStruct(audio_frames_shape(cfg, B), emb_dt)
+            extra_sh = NamedSharding(mesh, P(dpa, None, None))
+        elif cfg.vision_seq:
+            extra = ShapeDtypeStruct(vision_patches_shape(cfg, B), emb_dt)
+            extra_sh = NamedSharding(mesh, P(dpa, None, None))
+        cache_s, cache_sh = cache_structs_and_shardings(model, mesh, B, S, dp=dp)
+
+        def prefill_step(params, tokens, extra_embeds=None):
+            return model.prefill(params, tokens, capacity=S,
+                                 extra_embeds=extra_embeds,
+                                 cache_dtype=jnp.bfloat16)
+
+        vocab_ok = cfg.vocab_size % _axis_sizes(mesh).get("model", 1) == 0
+        logits_sh = NamedSharding(mesh, P(dpa, "model" if vocab_ok else None))
+        ins = (params_s, tokens) if extra is None else (params_s, tokens, extra)
+        ins_sh = (params_sh, tokens_sh) if extra is None else \
+            (params_sh, tokens_sh, extra_sh)
+        return (prefill_step, ins, ins_sh, (logits_sh, cache_sh), model, cfg)
+
+    # decode
+    capacity = S
+    cache_s, cache_sh = cache_structs_and_shardings(model, mesh, B, capacity,
+                                                    dp=dp)
+    token = ShapeDtypeStruct((B, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, P(dpa if B > 1 else None, None))
+    pos = ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    vocab_ok = cfg.vocab_size % _axis_sizes(mesh).get("model", 1) == 0
+    logits_sh = NamedSharding(mesh, P(dpa if B > 1 else None,
+                                      "model" if vocab_ok else None))
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return (decode_step, (params_s, cache_s, token, pos),
+            (params_sh, cache_sh, token_sh, pos_sh),
+            (logits_sh, cache_sh), model, cfg)

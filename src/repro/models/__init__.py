@@ -1,0 +1,17 @@
+"""Model zoo: build any assigned architecture from its ModelConfig."""
+from __future__ import annotations
+
+from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig, smoke_variant
+from .transformer import TransformerLM
+from .encdec import EncDecLM
+
+
+def build_model(cfg: ModelConfig, **opts):
+    """Returns a model object with init/apply/loss/prefill/decode_step."""
+    if cfg.family == "audio" or cfg.n_enc_layers:
+        return EncDecLM(cfg, **opts)
+    return TransformerLM(cfg, **opts)
+
+
+__all__ = ["ModelConfig", "MLAConfig", "MoEConfig", "SSMConfig",
+           "smoke_variant", "build_model", "TransformerLM", "EncDecLM"]

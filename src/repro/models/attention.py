@@ -1,0 +1,474 @@
+"""Attention: GQA/MHA (RoPE / M-RoPE / partial rotary / sliding window)
+and DeepSeek-V3 MLA (multi-head latent attention).
+
+Three execution paths:
+  * naive    — materialize (q, k) score matrix (small seq)
+  * chunked  — lax.scan over KV blocks with online softmax (memory-bounded;
+               the pure-XLA analogue of flash attention for long prefill)
+  * decode   — single query token against a KV cache (full or ring-buffer
+               sliding window)
+
+Shapes: hidden (B, S, D); q/k/v (B, S, H, hd).  GQA repeats KV heads by
+group broadcast (no materialized repeat: einsum over grouped heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import apply_mrope, apply_rope, dense_init
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def gqa_params(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), in_axis=0, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def mla_params(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype)},
+        "wuq": dense_init(ks[1], (m.q_lora_rank, h * qk_head), dtype=dtype),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype=dtype),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype)},
+        "wkr": dense_init(ks[3], (d, m.qk_rope_head_dim), dtype=dtype),
+        "wuk": dense_init(ks[4], (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype=dtype),
+        "wuv": dense_init(ks[5], (m.kv_lora_rank, h * m.v_head_dim), dtype=dtype),
+        "wo": dense_init(ks[6], (h * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# score computation cores
+# ---------------------------------------------------------------------------
+
+def _grouped_scores(q, k):
+    """q: (B,S,H,hd) k: (B,T,KV,hd) -> (B, KV, G, S, T) with H = KV*G."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k)
+
+
+def _grouped_out(probs, v):
+    """probs: (B,KV,G,S,T) v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    B, KV, G, S, T = probs.shape
+    hd = v.shape[-1]
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, KV * G, hd)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0,
+                    kv_len: Optional[jnp.ndarray] = None,
+                    sliding_window: int = 0, scale: Optional[float] = None):
+    """Full-score attention.  q:(B,S,H,hd) k,v:(B,T,KV,hd_{k,v})."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    scores = _grouped_scores(q * scale, k).astype(jnp.float32)  # (B,KV,G,S,T)
+    q_pos = jnp.arange(S)[:, None] + q_offset
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window:
+        mask &= k_pos > q_pos - sliding_window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len is not None:  # (B,) valid lengths in cache
+        valid = k_pos < kv_len[:, None]
+        scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return _grouped_out(probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      sliding_window: int = 0, scale: Optional[float] = None,
+                      remat: bool = False, unroll: bool = False,
+                      acc_bf16: bool = False, probs_bf16: bool = False):
+    """Two-level blockwise attention (flash-style, pure XLA).
+
+    Outer scan over q chunks, inner scan over kv chunks with online
+    softmax.  With ``remat`` the q-chunk body is checkpointed so the
+    backward pass never holds more than one q-chunk's score blocks —
+    the memory shape that makes 32k-seq training lower within HBM.
+    (On real TPU the Pallas flash kernel replaces this; this is the
+    GSPMD-partitionable fallback with the same asymptotics.)
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    hv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    ck = min(chunk, T)
+    cq = min(chunk, S)
+    if unroll:  # bound HLO size: at most 8x8 unrolled blocks
+        ck = max(ck, -(-T // 8))
+        cq = max(cq, -(-S // 8))
+    nk = -(-T // ck)
+    nq = -(-S // cq)
+    pad_k = nk * ck - T
+    pad_q = nq * cq - S
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, KV, hv), 1, 0)
+    qg = jnp.moveaxis((q * scale).reshape(B, nq, cq, KV, G, hd), 1, 0)
+
+    def q_body(carry, q_xs):
+        qb, iq = q_xs                                # (B,cq,KV,G,hd)
+        q_pos = iq * cq + jnp.arange(cq)[:, None]
+
+        def kv_body(inner, xs):
+            m, l, acc = inner
+            kb, vb, ik = xs                          # (B,ck,KV,hd)
+            s = jnp.einsum("bskgd,btkd->bkgst", qb, kb).astype(jnp.float32)
+            k_pos = ik * ck + jnp.arange(ck)[None, :]
+            mask = k_pos < T
+            if causal:
+                mask &= k_pos <= q_pos
+            if sliding_window:
+                mask &= k_pos > q_pos - sliding_window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            if probs_bf16:  # halve softmax-prob HBM traffic (doc'd error)
+                p = p.astype(jnp.bfloat16)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1).astype(jnp.float32)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vb.dtype), vb)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + \
+                pv.astype(acc.dtype)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        acc0 = jnp.zeros((B, KV, G, cq, hv),
+                         jnp.bfloat16 if acc_bf16 else v.dtype)
+        if unroll:
+            inner = (m0, l0, acc0)
+            for ik in range(nk):
+                inner, _ = kv_body(inner, (kc[ik], vc[ik], jnp.int32(ik)))
+            m, l, acc = inner
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, acc0),
+                                          (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return carry, jnp.moveaxis(out.reshape(B, KV * G, cq, hv), 1, 2)
+
+    if unroll:
+        # Python-loop variant: every block lands in the HLO, so
+        # cost_analysis counts true totals (XLA visits while bodies once)
+        outs = []
+        for iq in range(nq):
+            _, o = q_body(0.0, (qg[iq], jnp.int32(iq)))
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :S]
+    body = q_body
+    if remat:
+        body = jax.checkpoint(q_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(body, 0.0, (qg, jnp.arange(nq)))  # (nq,B,cq,H,hv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * cq, H, hv)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Per-layer stacked cache.  k/v: (L, B, C, KV, hd); length: (B,)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray           # current fill (same for all b in batch)
+    window: int = 0               # 0 = full cache; else ring buffer size
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(cfg: ModelConfig, n_attn_layers: int, batch: int,
+                  capacity: int, window: int = 0, dtype=jnp.bfloat16,
+                  k_dim: Optional[int] = None, v_dim: Optional[int] = None,
+                  kv_heads: Optional[int] = None) -> KVCache:
+    kv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    hd_k = k_dim if k_dim is not None else cfg.resolved_head_dim
+    hd_v = v_dim if v_dim is not None else cfg.resolved_head_dim
+    cap = min(capacity, window) if window else capacity
+    return KVCache(
+        k=jnp.zeros((n_attn_layers, batch, cap, kv, hd_k), dtype),
+        v=jnp.zeros((n_attn_layers, batch, cap, kv, hd_v), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+        window=window,
+    )
+
+
+def cache_update_one(k_cache, v_cache, k_new, v_new, pos, window: int):
+    """Insert one token at `pos` (ring index if window).  k_cache:(B,C,KV,hd)."""
+    cap = k_cache.shape[1]
+    idx = jnp.mod(pos, cap) if window else pos
+    k_cache = _dynamic_token_update(k_cache, k_new, idx)
+    v_cache = _dynamic_token_update(v_cache, v_new, idx)
+    return k_cache, v_cache
+
+
+def _dynamic_token_update(cache, new, idx):
+    """cache: (B, C, KV, hd); new: (B, 1, KV, hd); idx scalar."""
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, idx, 0, 0))
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     scale: Optional[float] = None):
+    """One-token attention over the cache.
+
+    q: (B,1,H,hd); caches (B,C,KV,hd); pos = tokens generated so far
+    (the new token's position).  With a ring buffer (window), all slots
+    are valid once pos >= capacity; masking handles partial fill.
+    """
+    B, _, H, hd = q.shape
+    C = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    scores = _grouped_scores(q * scale, k_cache).astype(jnp.float32)  # (B,KV,G,1,C)
+    slot = jnp.arange(C)[None, :]
+    n_valid = jnp.minimum(pos + 1, C)  # includes the just-inserted token
+    valid = slot < n_valid
+    scores = jnp.where(valid[:, None, None, None] if valid.ndim == 2
+                       else valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return _grouped_out(probs, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# full attention layers (projection + rope + core) — GQA
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, cfg: ModelConfig, x):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (q.reshape(B, S, h, hd), k.reshape(B, S, kv, hd),
+            v.reshape(B, S, kv, hd))
+
+
+def _rope_qk(cfg: ModelConfig, q, k, positions):
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+def gqa_forward(p, cfg: ModelConfig, x, positions, *, causal: bool = True,
+                impl: str = "naive", chunk: int = 1024, remat: bool = False,
+                unroll: bool = False, acc_bf16: bool = False,
+                probs_bf16: bool = False):
+    """Training/prefill forward.  positions: (B,S) or (3,B,S) for mrope."""
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    if impl == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                sliding_window=cfg.sliding_window, remat=remat,
+                                unroll=unroll, acc_bf16=acc_bf16,
+                                probs_bf16=probs_bf16)
+    else:
+        out = naive_attention(q, k, v, causal=causal,
+                              sliding_window=cfg.sliding_window)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_prefill(p, cfg: ModelConfig, x, positions, *, impl: str = "chunked",
+                chunk: int = 1024, unroll: bool = False,
+                probs_bf16: bool = False):
+    """Prefill: returns (out, (k, v)) for cache seeding."""
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    if impl == "chunked":
+        out = chunked_attention(q, k, v, causal=True, chunk=chunk,
+                                sliding_window=cfg.sliding_window,
+                                unroll=unroll, probs_bf16=probs_bf16)
+    else:
+        out = naive_attention(q, k, v, causal=True,
+                              sliding_window=cfg.sliding_window)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def gqa_decode(p, cfg: ModelConfig, x, k_cache, v_cache, pos):
+    """Decode one token.  x: (B,1,D); pos: scalar position of this token.
+
+    Returns (out, k_cache, v_cache) with the new token inserted.
+    """
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    window = cfg.sliding_window
+    cap = k_cache.shape[1]
+    idx = jnp.mod(pos, cap) if window else pos
+    k_cache = _dynamic_token_update(k_cache, k, idx)
+    v_cache = _dynamic_token_update(v_cache, v, idx)
+    out = decode_attention(q, k_cache, v_cache, pos, window=window)
+    B = x.shape[0]
+    return out.reshape(B, 1, -1) @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3) — cache holds (c_kv, k_rope): the latent compression
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    h = cfg.n_heads
+    B, S, _ = x.shape
+    from .common import rmsnorm
+    cq = rmsnorm(p["q_norm"], x @ p["wdq"])
+    q = (cq @ p["wuq"]).reshape(B, S, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = rmsnorm(p["kv_norm"], x @ p["wdkv"])          # (B,S,rank)
+    k_rope = apply_rope((x @ p["wkr"]).reshape(B, S, 1, m.qk_rope_head_dim),
+                        positions, cfg.rope_theta)        # shared single head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(p, cfg: ModelConfig, c_kv):
+    m = cfg.mla
+    B, T = c_kv.shape[:2]
+    h = cfg.n_heads
+    k_nope = (c_kv @ p["wuk"]).reshape(B, T, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wuv"]).reshape(B, T, h, m.v_head_dim)
+    return k_nope, v
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, *, causal: bool = True,
+                impl: str = "naive", chunk: int = 1024, remat: bool = False,
+                unroll: bool = False, acc_bf16: bool = False,
+                probs_bf16: bool = False):
+    m = cfg.mla
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope, v = _mla_expand_kv(p, cfg, c_kv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+                        axis=-1)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if impl == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                scale=scale, remat=remat, unroll=unroll,
+                                acc_bf16=acc_bf16, probs_bf16=probs_bf16)
+    else:
+        out = naive_attention(q, k, v, causal=causal, scale=scale)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_prefill(p, cfg: ModelConfig, x, positions, *, impl: str = "chunked",
+                chunk: int = 1024, unroll: bool = False,
+                probs_bf16: bool = False):
+    """Returns (out, (c_kv, k_rope)) — the latent cache (the MLA memory win)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope, v = _mla_expand_kv(p, cfg, c_kv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+                        axis=-1)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if impl == "chunked":
+        out = chunked_attention(q, k, v, causal=True, chunk=chunk, scale=scale,
+                                unroll=unroll, probs_bf16=probs_bf16)
+    else:
+        out = naive_attention(q, k, v, causal=True, scale=scale)
+    return out.reshape(B, S, -1) @ p["wo"], (c_kv, k_rope.reshape(B, S, m.qk_rope_head_dim))
+
+
+def mla_decode(p, cfg: ModelConfig, x, c_cache, kr_cache, pos,
+               absorb: bool = False):
+    """Decode with latent cache.  c_cache: (B,C,rank); kr_cache: (B,C,rd).
+
+    ``absorb=True`` folds W_uk into the query (q_nope @ W_uk^T per head)
+    so attention runs directly in the latent space — the beyond-paper
+    decode optimization; ``False`` re-expands K from the cache (naive).
+    """
+    m = cfg.mla
+    h = cfg.n_heads
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, c_kv.astype(c_cache.dtype), (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, k_rope.reshape(B, 1, m.qk_rope_head_dim).astype(kr_cache.dtype),
+        (0, pos, 0))
+    C = c_cache.shape[1]
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    slot = jnp.arange(C)[None, :]
+    valid = slot <= pos
+    if absorb:
+        # q_lat: (B,1,h,rank) = q_nope @ W_uk (absorbed)
+        wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c_cache)
+        s_rope = jnp.einsum("bshd,btd->bhst", q_rope, kr_cache)
+        scores = ((s_lat + s_rope) * scale).astype(jnp.float32)
+        scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, c_cache)  # (B,1,h,rank)
+        wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, wuv)
+    else:
+        k_nope, v = _mla_expand_kv(p, cfg, c_cache)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_cache[:, :, None, :],
+                                      k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scores = (jnp.einsum("bshd,bthd->bhst", q * scale, k)).astype(jnp.float32)
+        scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out.reshape(B, 1, -1) @ p["wo"], c_cache, kr_cache

@@ -1,0 +1,132 @@
+"""Shared layers: norms, rotary embeddings, activations, init helpers.
+
+Params are plain pytrees (nested dicts of jnp arrays); every function is
+functional and jit/scan-friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# -- initializers -----------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+def rmsnorm_params(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_params(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_params, rmsnorm
+    if kind == "layernorm":
+        return layernorm_params, layernorm
+    raise ValueError(kind)
+
+
+# -- rotary ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rope_pct: float = 1.0):
+    """Inverse frequencies for the rotated fraction of head_dim."""
+    rot = int(head_dim * rope_pct)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return jnp.asarray(inv, jnp.float32), rot
+
+
+def apply_rope(x, positions, theta: float, rope_pct: float = 1.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, theta, rope_pct)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE [arXiv:2409.12191].
+
+    x: (..., seq, heads, head_dim); positions3: (3, ..., seq) — separate
+    temporal/height/width position streams.  Frequency bands are split
+    into three sections, each rotated by its own position stream.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+    inv = jnp.asarray(inv, jnp.float32)  # (half,)
+    # static one-hot: which of the 3 position streams drives each band
+    sec_id = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+    onehot = jnp.asarray(np.eye(3)[sec_id].T, jnp.float32)  # (3, half)
+    pos = positions3.astype(jnp.float32)                     # (3, ..., seq)
+    ang_all = pos[..., :, None] * inv                        # (3, ..., seq, half)
+    bshape = (3,) + (1,) * (ang_all.ndim - 2) + (half,)
+    ang = (ang_all * onehot.reshape(bshape)).sum(axis=0)     # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# -- activations -------------------------------------------------------------------
+
+def relu2(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def mlp_act_fn(name: str):
+    return {"relu2": relu2, "gelu": jax.nn.gelu,
+            "silu": jax.nn.silu}[name]

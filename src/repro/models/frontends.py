@@ -1,0 +1,33 @@
+"""Modality frontend STUBS (the one allowed carve-out).
+
+The audio path (mel spectrogram + conv codec) and vision path (ViT/SigLIP
+encoder + projector) are not implemented; ``input_specs()`` supplies
+precomputed frame/patch embeddings of the correct shape, and these
+helpers synthesize deterministic fake embeddings for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def audio_frames_shape(cfg: ModelConfig, batch: int):
+    """Whisper: post-conv frame embeddings (B, enc_seq, d_model)."""
+    return (batch, cfg.enc_seq, cfg.d_model)
+
+
+def vision_patches_shape(cfg: ModelConfig, batch: int):
+    """VLM: projected patch embeddings (B, vision_seq, d_model)."""
+    return (batch, cfg.vision_seq, cfg.d_model)
+
+
+def fake_audio_frames(cfg: ModelConfig, batch: int, key=None, dtype=jnp.float32):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(key, audio_frames_shape(cfg, batch), dtype) * 0.02
+
+
+def fake_vision_patches(cfg: ModelConfig, batch: int, key=None, dtype=jnp.float32):
+    key = key if key is not None else jax.random.PRNGKey(1)
+    return jax.random.normal(key, vision_patches_shape(cfg, batch), dtype) * 0.02

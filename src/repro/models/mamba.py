@@ -1,0 +1,172 @@
+"""Mamba (S6) block — the SSM layer of Jamba [arXiv:2403.19887].
+
+TPU adaptation: the CUDA selective-scan becomes (a) a `lax.scan` linear
+recurrence (reference / lowering path), (b) an optional chunked form
+(`chunk_size`) that runs the recurrence at chunk granularity with
+parallel intra-chunk compute — bigger matmuls for the MXU, shorter scan
+— and (c) the Pallas `ssm_scan` kernel for the hot path.
+
+State for decode: conv ring (B, d_conv-1, d_inner) + ssm state
+(B, d_inner, d_state): constant memory per token — why Jamba runs
+long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .config import ModelConfig
+
+
+def mamba_params(key, cfg: ModelConfig, dtype):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm.d_state
+    dc, dtr = cfg.ssm.d_conv, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype=dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,di); w: (dc,di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    # unrolled taps (dc is 4): avoids conv layout shuffles on TPU
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(dc))
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(p, cfg: ModelConfig, xs):
+    """xs: (B,S,di) post-conv.  Returns dt (B,S,di), Bc, Cc (B,S,N)."""
+    N, dtr = cfg.ssm.d_state, cfg.dt_rank
+    proj = xs @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])
+    return dt, Bc, Cc
+
+
+def selective_scan(dt, Bc, Cc, xs, A, D, h0=None, *, use_kernel: bool = False,
+                   chunk_size: int = 256, remat: bool = False,
+                   unroll: bool = False):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t + D x_t.
+
+    dt, xs: (B,S,di); Bc, Cc: (B,S,N); A: (di,N).  Returns (y, h_last).
+
+    Memory design: y is produced *inside* the time scan (never a stacked
+    (B,S,di,N) state tensor), time runs in checkpointed chunks so the
+    backward pass recomputes one chunk at a time — the pure-XLA analogue
+    of the Pallas `ssm_scan` kernel (used when ``use_kernel``).
+    """
+    if use_kernel:
+        from ..kernels.ssm_scan import ops as kops
+        return kops.selective_scan(dt, Bc, Cc, xs, A, D, h0)
+    B_, S, di = xs.shape
+    N = Bc.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B_, di, N), jnp.float32)
+
+    ct = min(chunk_size, S) if chunk_size else S
+    if unroll:  # bound HLO size: at most 8 unrolled chunk bodies
+        ct = max(ct, -(-S // 8))
+    nc = -(-S // ct)
+    pad = nc * ct - S
+    dt32 = dt.astype(jnp.float32)
+    xs32 = xs.astype(jnp.float32)
+    Bc32 = Bc.astype(jnp.float32)
+    Cc32 = Cc.astype(jnp.float32)
+    if pad:  # dt=0 on padding => identity decay, zero drive
+        dt32 = jnp.pad(dt32, ((0, 0), (0, pad), (0, 0)))
+        xs32 = jnp.pad(xs32, ((0, 0), (0, pad), (0, 0)))
+        Bc32 = jnp.pad(Bc32, ((0, 0), (0, pad), (0, 0)))
+        Cc32 = jnp.pad(Cc32, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(a):  # (B, S', ...) -> (nc, B, ct, ...)
+        return jnp.moveaxis(a.reshape(B_, nc, ct, *a.shape[2:]), 1, 0)
+
+    xs_c = (to_chunks(dt32), to_chunks(xs32), to_chunks(Bc32), to_chunks(Cc32))
+
+    def chunk_body(h, xs_):
+        dt_c, x_c, b_c, c_c = xs_
+
+        def step(h, t_):
+            dt_t, x_t, b_t, c_t = t_
+            decay = jnp.exp(dt_t[..., None] * A[None])       # (B,di,N)
+            drive = (dt_t * x_t)[..., None] * b_t[:, None, :]
+            h = decay * h + drive
+            y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y_t
+
+        h, y_c = jax.lax.scan(
+            step, h, (jnp.moveaxis(dt_c, 1, 0), jnp.moveaxis(x_c, 1, 0),
+                      jnp.moveaxis(b_c, 1, 0), jnp.moveaxis(c_c, 1, 0)))
+        return h, jnp.moveaxis(y_c, 0, 1)                     # (B,ct,di)
+
+    if unroll:
+        h, ys = h0, []
+        for i in range(nc):
+            h, y_c = chunk_body(h, jax.tree.map(lambda a: a[i], xs_c))
+            ys.append(y_c)
+        h_last, y = h, jnp.stack(ys, 0)
+    else:
+        body = chunk_body
+        if remat:
+            body = jax.checkpoint(chunk_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        h_last, y = jax.lax.scan(body, h0, xs_c)
+    y = jnp.moveaxis(y, 0, 1).reshape(B_, nc * ct, di)[:, :S]
+    y = y + D[None, None] * xs.astype(jnp.float32)
+    return y.astype(xs.dtype), h_last
+
+
+def mamba_forward(p, cfg: ModelConfig, x, *, use_kernel: bool = False,
+                  chunk_size: int = 256, remat: bool = False,
+                  unroll: bool = False):
+    """Training/prefill.  x: (B,S,d) -> (y, (conv_state, ssm_state))."""
+    from .sharding import constrain
+    di, dc = cfg.d_inner, cfg.ssm.d_conv
+    xz = x @ p["in_proj"]
+    xz = constrain(xz, ("pod", "data"), None, "model")
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xs[:, -(dc - 1):, :]                              # decode seed
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+    dt, Bc, Cc = _ssm_inputs(p, cfg, xs)
+    A = -jnp.exp(p["A_log"])
+    y, h_last = selective_scan(dt, Bc, Cc, xs, A, p["D"],
+                               use_kernel=use_kernel, chunk_size=chunk_size,
+                               remat=remat, unroll=unroll)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (conv_tail, h_last)
+
+
+def mamba_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One token.  x: (B,1,d); conv_state: (B,dc-1,di); ssm_state: (B,di,N)."""
+    di, dc = cfg.d_inner, cfg.ssm.d_conv
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                             # (B,1,di)
+    window = jnp.concatenate([conv_state, xs], axis=1)            # (B,dc,di)
+    new_conv_state = window[:, 1:, :]
+    xs = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1, keepdims=True)
+                     + p["conv_b"][None, None])
+    dt, Bc, Cc = _ssm_inputs(p, cfg, xs)
+    A = -jnp.exp(p["A_log"])
+    dt32 = dt[:, 0].astype(jnp.float32)                           # (B,di)
+    decay = jnp.exp(dt32[..., None] * A[None])                    # (B,di,N)
+    drive = (dt32 * xs[:, 0].astype(jnp.float32))[..., None] * \
+        Bc[:, 0].astype(jnp.float32)[:, None, :]
+    h = decay * ssm_state + drive
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D"][None] * xs[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
+    return y @ p["out_proj"], (new_conv_state, h)

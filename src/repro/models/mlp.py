@@ -1,0 +1,28 @@
+"""Feed-forward blocks: swiglu / squared-ReLU / gelu."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, mlp_act_fn
+from .config import ModelConfig
+
+
+def mlp_params(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_forward(p, act: str, x):
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return mlp_act_fn(act)(x @ p["w_up"]) @ p["w_down"]

@@ -1,0 +1,559 @@
+"""Unified decoder-only model covering dense / MoE / hybrid / SSM / VLM.
+
+A config expands to a *layer pattern*: an optional unrolled ``prefix``
+(e.g. DeepSeek-V3's first 3 dense layers) plus a repeating ``period`` of
+sub-layer descriptors scanned ``n_periods`` times (scan-over-layers keeps
+HLO size ~O(period), essential for 61-96 layer dry-runs).
+
+Sub-layer descriptor: (block, mlp) with
+  block ∈ {attn, mla, mamba, mlstm, slstm};  mlp ∈ {dense, moe, none}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as A
+from . import mamba as M
+from . import xlstm as X
+from .common import dense_init, dtype_of, embed_init, make_norm
+from .config import ModelConfig
+from .mlp import mlp_forward, mlp_params
+from .moe import moe_forward, moe_params
+from .sharding import constrain
+
+Desc = Tuple[str, str]
+
+
+def layer_pattern(cfg: ModelConfig) -> Tuple[List[Desc], List[Desc], int]:
+    """Returns (prefix_descs, period_descs, n_periods)."""
+    if cfg.family in ("dense", "vlm"):
+        return [], [("attn", "dense")], cfg.n_layers
+    if cfg.family == "moe":
+        attn = "mla" if cfg.mla is not None else "attn"
+        nd = cfg.moe.first_dense_layers
+        prefix = [(attn, "dense")] * nd
+        return prefix, [(attn, "moe")], cfg.n_layers - nd
+    if cfg.family == "hybrid":
+        period = []
+        for i in range(cfg.attn_layer_period):
+            block = "attn" if cfg.is_attn_layer(i) else "mamba"
+            mlp = "moe" if cfg.is_moe_layer(i) else "dense"
+            period.append((block, mlp))
+        assert cfg.n_layers % cfg.attn_layer_period == 0
+        return [], period, cfg.n_layers // cfg.attn_layer_period
+    if cfg.family == "ssm":
+        every = cfg.ssm.slstm_every or 4
+        period = [("mlstm", "none")] * (every - 1) + [("slstm", "none")]
+        assert cfg.n_layers % every == 0
+        return [], period, cfg.n_layers // every
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# sub-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _sublayer_params(key, cfg: ModelConfig, desc: Desc, dtype, dense_ff: int):
+    block, mlp = desc
+    norm_params, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": norm_params(cfg.d_model, dtype)}
+    if block == "attn":
+        p["attn"] = A.gqa_params(ks[0], cfg, dtype)
+    elif block == "mla":
+        p["attn"] = A.mla_params(ks[0], cfg, dtype)
+    elif block == "mamba":
+        p["mamba"] = M.mamba_params(ks[0], cfg, dtype)
+    elif block == "mlstm":
+        p["mlstm"] = X.mlstm_params(ks[0], cfg, dtype)
+    elif block == "slstm":
+        p["slstm"] = X.slstm_params(ks[0], cfg, dtype)
+    if mlp == "dense":
+        p["norm2"] = norm_params(cfg.d_model, dtype)
+        p["mlp"] = mlp_params(ks[1], cfg.d_model, dense_ff, cfg.mlp_act, dtype)
+    elif mlp == "moe":
+        p["norm2"] = norm_params(cfg.d_model, dtype)
+        p["moe"] = moe_params(ks[1], cfg, dtype)
+    return p
+
+
+def _sublayer_state(cfg: ModelConfig, desc: Desc, batch: int, capacity: int,
+                    dtype) -> Optional[Dict[str, jnp.ndarray]]:
+    """Decode-time state for one sub-layer (None if stateless)."""
+    block, _ = desc
+    if block == "attn":
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cap = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+        return {"k": jnp.zeros((batch, cap, kv, hd), dtype),
+                "v": jnp.zeros((batch, cap, kv, hd), dtype)}
+    if block == "mla":
+        m = cfg.mla
+        return {"c": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype)}
+    if block == "mamba":
+        return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, cfg.d_inner), dtype),
+                "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm.d_state), jnp.float32)}
+    if block == "mlstm":
+        di, H, dh = X._dims(cfg)
+        return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, H, dh), jnp.float32),
+                "m": jnp.zeros((batch, H), jnp.float32)}
+    if block == "slstm":
+        di, H, dh = X._dims(cfg)
+        return {"h": jnp.zeros((batch, di), jnp.float32),
+                "cs": jnp.zeros((batch, di), jnp.float32),
+                "ns": jnp.zeros((batch, di), jnp.float32),
+                "ms": jnp.zeros((batch, di), jnp.float32)}
+    raise ValueError(block)
+
+
+def _apply_sublayer(p, cfg: ModelConfig, desc: Desc, x, positions, *,
+                    attn_impl: str, use_kernels: bool, remat: bool = False,
+                    unroll: bool = False, attn_chunk: int = 1024,
+                    acc_bf16: bool = False, probs_bf16: bool = False,
+                    seq_parallel: bool = False):
+    """Training/full-sequence forward.  Returns (x, aux)."""
+    block, mlp = desc
+    _, norm = make_norm(cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(p["norm1"], x)
+    if block == "attn":
+        y = A.gqa_forward(p["attn"], cfg, h, positions, impl=attn_impl,
+                          remat=remat, unroll=unroll, chunk=attn_chunk,
+                          acc_bf16=acc_bf16, probs_bf16=probs_bf16)
+    elif block == "mla":
+        y = A.mla_forward(p["attn"], cfg, h, positions, impl=attn_impl,
+                          remat=remat, unroll=unroll, chunk=attn_chunk,
+                          acc_bf16=acc_bf16, probs_bf16=probs_bf16)
+    elif block == "mamba":
+        y, _ = M.mamba_forward(p["mamba"], cfg, h, use_kernel=False,
+                               remat=remat, unroll=unroll)
+    elif block == "mlstm":
+        y, _ = X.mlstm_forward(p["mlstm"], cfg, h, remat=remat, unroll=unroll)
+    elif block == "slstm":
+        y, _ = X.slstm_forward(p["slstm"], cfg, h, remat=remat, unroll=unroll)
+    x = x + y
+    # sequence parallelism: keep the residual sharded over "model" on the
+    # seq dim between blocks (all-reduce -> reduce-scatter + all-gather)
+    seq_spec = "model" if seq_parallel else None
+    x = constrain(x, ("pod", "data"), seq_spec, None)
+    if mlp != "none":
+        h = norm(p["norm2"], x)
+        if mlp == "dense":
+            x = x + mlp_forward(p["mlp"], cfg.mlp_act, h)
+        else:
+            y, aux = moe_forward(p["moe"], cfg, h, use_kernel=use_kernels)
+            x = x + y
+        x = constrain(x, ("pod", "data"), seq_spec, None)
+    return x, aux
+
+
+def _prefill_sublayer(p, cfg: ModelConfig, desc: Desc, x, positions, *,
+                      capacity: int, cache_dtype, attn_impl: str,
+                      unroll: bool = False, attn_chunk: int = 1024,
+                      probs_bf16: bool = False, seq_parallel: bool = False):
+    """Full-sequence forward that also emits decode state."""
+    block, mlp = desc
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["norm1"], x)
+    B, S, _ = x.shape
+    if block == "attn":
+        y, (k, v) = A.gqa_prefill(p["attn"], cfg, h, positions, impl=attn_impl,
+                                  unroll=unroll, chunk=attn_chunk,
+                                  probs_bf16=probs_bf16)
+        cap = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+        state = {"k": _seed_cache(k, cap, cache_dtype, cfg.sliding_window),
+                 "v": _seed_cache(v, cap, cache_dtype, cfg.sliding_window)}
+    elif block == "mla":
+        y, (c, kr) = A.mla_prefill(p["attn"], cfg, h, positions, impl=attn_impl,
+                                   unroll=unroll, chunk=attn_chunk,
+                                   probs_bf16=probs_bf16)
+        state = {"c": _seed_cache(c, capacity, cache_dtype, 0),
+                 "kr": _seed_cache(kr, capacity, cache_dtype, 0)}
+    elif block == "mamba":
+        y, (conv, ssm) = M.mamba_forward(p["mamba"], cfg, h, unroll=unroll)
+        state = {"conv": conv.astype(cache_dtype), "ssm": ssm}
+    elif block == "mlstm":
+        y, (C, n, m) = X.mlstm_forward(p["mlstm"], cfg, h, unroll=unroll)
+        state = {"C": C, "n": n, "m": m}
+    elif block == "slstm":
+        y, (hh, cc, nn, mm) = X.slstm_forward(p["slstm"], cfg, h, unroll=unroll)
+        state = {"h": hh, "cs": cc, "ns": nn, "ms": mm}
+    x = x + y
+    # NOTE (measured, EXPERIMENTS.md H3): a blanket sharding constraint
+    # here acts as a fusion barrier and doubles prefill HBM traffic;
+    # constrain only when sequence parallelism actually changes layout.
+    if seq_parallel:
+        x = constrain(x, ("pod", "data"), "model", None)
+    if mlp != "none":
+        h = norm(p["norm2"], x)
+        if mlp == "dense":
+            x = x + mlp_forward(p["mlp"], cfg.mlp_act, h)
+        else:
+            y, _ = moe_forward(p["moe"], cfg, h)
+            x = x + y
+        if seq_parallel:
+            x = constrain(x, ("pod", "data"), "model", None)
+    return x, state
+
+
+def _seed_cache(seq_kv, capacity: int, dtype, window: int):
+    """Embed prefill K/V (B,S,...) into a capacity-C cache buffer.
+
+    For sliding windows keeps the last ``capacity`` tokens (ring order is
+    position % capacity, consistent with decode inserts).
+    """
+    B, S = seq_kv.shape[:2]
+    if window and S > capacity:
+        # last `capacity` tokens, placed at their ring slots
+        tail = seq_kv[:, S - capacity:]
+        pos = jnp.arange(S - capacity, S)
+        slots = jnp.mod(pos, capacity)
+        buf = jnp.zeros((B, capacity) + seq_kv.shape[2:], dtype)
+        return buf.at[:, slots].set(tail.astype(dtype))
+    if S >= capacity:
+        return seq_kv[:, :capacity].astype(dtype)
+    pad = [(0, 0), (0, capacity - S)] + [(0, 0)] * (seq_kv.ndim - 2)
+    return jnp.pad(seq_kv.astype(dtype), pad)
+
+
+def _decode_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, pos, *,
+                     mla_absorb: bool = False):
+    block, mlp = desc
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["norm1"], x)
+    if block == "attn":
+        y, k, v = A.gqa_decode(p["attn"], cfg, h, state["k"], state["v"], pos)
+        state = {"k": k, "v": v}
+    elif block == "mla":
+        y, c, kr = A.mla_decode(p["attn"], cfg, h, state["c"], state["kr"], pos,
+                                absorb=mla_absorb)
+        state = {"c": c, "kr": kr}
+    elif block == "mamba":
+        y, (conv, ssm) = M.mamba_decode(p["mamba"], cfg, h, state["conv"], state["ssm"])
+        state = {"conv": conv, "ssm": ssm}
+    elif block == "mlstm":
+        y, (C, n, m) = X.mlstm_decode(p["mlstm"], cfg, h, (state["C"], state["n"], state["m"]))
+        state = {"C": C, "n": n, "m": m}
+    elif block == "slstm":
+        y, (hh, cc, nn, mm) = X.slstm_decode(
+            p["slstm"], cfg, h, (state["h"], state["cs"], state["ns"], state["ms"]))
+        state = {"h": hh, "cs": cc, "ns": nn, "ms": mm}
+    x = x + y
+    x = constrain(x, ("pod", "data"), None, None)
+    if mlp != "none":
+        h = norm(p["norm2"], x)
+        if mlp == "dense":
+            x = x + mlp_forward(p["mlp"], cfg.mlp_act, h)
+        else:
+            y, _ = moe_forward(p["moe"], cfg, h)
+            x = x + y
+        x = constrain(x, ("pod", "data"), None, None)
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def make_positions(cfg: ModelConfig, B: int, S: int, offset: int = 0):
+    """(B,S) int32, or (3,B,S) for mrope (vision grid then text)."""
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None] + offset, (B, S))
+    if cfg.rope != "mrope":
+        return pos
+    vs = cfg.vision_seq
+    if vs == 0 or S <= vs:
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    # vision prefix: t=0, h=i//g, w=i%g on a sqrt grid; text: shared index
+    g = max(int(np.sqrt(vs)), 1)
+    vis_i = np.arange(vs)
+    t = np.zeros(vs, np.int32)
+    hh = (vis_i // g).astype(np.int32)
+    ww = (vis_i % g).astype(np.int32)
+    text = np.arange(S - vs, dtype=np.int32) + int(np.max(hh)) + 1
+    p_t = np.concatenate([t, text])
+    p_h = np.concatenate([hh, text])
+    p_w = np.concatenate([ww, text])
+    pos3 = jnp.asarray(np.stack([p_t, p_h, p_w]), jnp.int32) + offset
+    return jnp.broadcast_to(pos3[:, None, :], (3, B, S))
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "auto",
+                 use_kernels: bool = False, remat: bool = False,
+                 mla_absorb: bool = False, unroll: bool = False,
+                 attn_chunk: int = 1024, acc_bf16: bool = False,
+                 probs_bf16: bool = False, seq_parallel: bool = False):
+        self.cfg = cfg
+        self.prefix_descs, self.period_descs, self.n_periods = layer_pattern(cfg)
+        self.attn_impl = attn_impl
+        self.use_kernels = use_kernels
+        self.remat = remat
+        self.mla_absorb = mla_absorb
+        self.unroll = unroll  # Python-loop layers/chunks: true HLO cost totals
+        self.attn_chunk = attn_chunk
+        self.acc_bf16 = acc_bf16
+        self.probs_bf16 = probs_bf16
+        self.seq_parallel = seq_parallel
+
+    # -- params -------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        dense_ff = cfg.d_ff
+        norm_params, _ = make_norm(cfg.norm)
+        k_embed, k_prefix, k_blocks, k_head, k_mtp = jax.random.split(key, 5)
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": norm_params(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                           dtype=dtype)
+        if self.prefix_descs:
+            pf = []
+            for i, desc in enumerate(self.prefix_descs):
+                kk = jax.random.fold_in(k_prefix, i)
+                # dsv3 prefix dense layers use the big dense FFN
+                ff = cfg.prefix_d_ff or dense_ff
+                pf.append(_sublayer_params(kk, cfg, desc, dtype, ff))
+            params["prefix"] = pf
+        # periodic blocks: vmap init over periods -> stacked leaves
+        blocks: Dict[str, Any] = {}
+        for j, desc in enumerate(self.period_descs):
+            kj = jax.random.fold_in(k_blocks, j)
+            keys = jax.random.split(kj, self.n_periods)
+            blocks[f"s{j}"] = jax.vmap(
+                lambda k: _sublayer_params(k, cfg, desc, dtype, dense_ff))(keys)
+        params["blocks"] = blocks
+        if cfg.mtp_depth:
+            params["mtp"] = {
+                "norm_h": norm_params(cfg.d_model, dtype),
+                "norm_e": norm_params(cfg.d_model, dtype),
+                "proj": dense_init(k_mtp, (2 * cfg.d_model, cfg.d_model), dtype=dtype),
+                "layer": _sublayer_params(
+                    jax.random.fold_in(k_mtp, 1), cfg,
+                    (self.period_descs[0][0], "dense"), dtype,
+                    cfg.prefix_d_ff or dense_ff),
+            }
+        return params
+
+    # -- embedding / head ------------------------------------------------------
+    def _embed(self, params, tokens, extra_embeds=None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype_of(cfg.compute_dtype))
+        if extra_embeds is not None:
+            # modality stub: overwrite the first vision_seq positions
+            vs = extra_embeds.shape[1]
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x[:, vs:]], axis=1)
+        return constrain(x, ("pod", "data"), None, None)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        h = norm(params["final_norm"], x)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = h @ w.astype(h.dtype)
+        return constrain(logits, ("pod", "data"), None, "model")
+
+    # -- full-sequence forward ----------------------------------------------------
+    def apply(self, params, tokens, extra_embeds=None, positions=None):
+        """Training forward -> (logits, aux_loss)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        impl = self._impl(S)
+        if positions is None:
+            positions = make_positions(cfg, B, S)
+        x = self._embed(params, tokens, extra_embeds)
+        aux = jnp.zeros((), jnp.float32)
+        for i, desc in enumerate(self.prefix_descs):
+            x, a = _apply_sublayer(params["prefix"][i], cfg, desc, x, positions,
+                                   attn_impl=impl, use_kernels=self.use_kernels,
+                                   remat=self.remat, attn_chunk=self.attn_chunk,
+                                   acc_bf16=self.acc_bf16,
+                                   probs_bf16=self.probs_bf16,
+                                   seq_parallel=self.seq_parallel)
+            aux = aux + a
+
+        def period_body(carry, pp):
+            x, aux = carry
+            for j, desc in enumerate(self.period_descs):
+                x, a = _apply_sublayer(pp[f"s{j}"], cfg, desc, x, positions,
+                                       attn_impl=impl,
+                                       use_kernels=self.use_kernels,
+                                       remat=self.remat, unroll=self.unroll,
+                                       attn_chunk=self.attn_chunk,
+                                       acc_bf16=self.acc_bf16,
+                                       probs_bf16=self.probs_bf16,
+                                       seq_parallel=self.seq_parallel)
+                aux = aux + a
+            return (x, aux), None
+
+        if self.unroll:
+            carry = (x, aux)
+            for i in range(self.n_periods):
+                carry, _ = period_body(
+                    carry, jax.tree.map(lambda a: a[i], params["blocks"]))
+            x, aux = carry
+        else:
+            body = period_body
+            if self.remat:
+                body = jax.checkpoint(
+                    period_body, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+        return self._head(params, x), aux
+
+    def _impl(self, S: int) -> str:
+        if self.attn_impl != "auto":
+            return self.attn_impl
+        return "chunked" if S > 2048 else "naive"
+
+    # -- mtp auxiliary head (dsv3) ---------------------------------------------------
+    def mtp_logits(self, params, hidden, tokens_next, positions):
+        """Predict t+2 from final hidden + embedding of token t+1."""
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        p = params["mtp"]
+        e = jnp.take(params["embed"], tokens_next, axis=0).astype(hidden.dtype)
+        h = jnp.concatenate([norm(p["norm_h"], hidden), norm(p["norm_e"], e)], axis=-1)
+        h = h @ p["proj"]
+        h, _ = _apply_sublayer(p["layer"], cfg, (self.period_descs[0][0], "dense"),
+                               h, positions, attn_impl=self._impl(h.shape[1]),
+                               use_kernels=False)
+        return self._head(params, h)
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, capacity: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache: Dict[str, Any] = {}
+        if self.prefix_descs:
+            cache["prefix"] = [
+                _sublayer_state(cfg, d, batch, capacity, dtype)
+                for d in self.prefix_descs]
+        blocks = {}
+        for j, desc in enumerate(self.period_descs):
+            one = _sublayer_state(cfg, desc, batch, capacity, dtype)
+            blocks[f"s{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (self.n_periods,) + a.shape).copy(),
+                one)
+        cache["blocks"] = blocks
+        return cache
+
+    def prefill(self, params, tokens, capacity: int, extra_embeds=None,
+                cache_dtype=jnp.bfloat16):
+        """-> (last-token logits (B,V), cache)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        impl = self._impl(S)
+        positions = make_positions(cfg, B, S)
+        x = self._embed(params, tokens, extra_embeds)
+        cache: Dict[str, Any] = {}
+        if self.prefix_descs:
+            pc = []
+            for i, desc in enumerate(self.prefix_descs):
+                x, st = _prefill_sublayer(params["prefix"][i], cfg, desc, x,
+                                          positions, capacity=capacity,
+                                          cache_dtype=cache_dtype,
+                                          attn_impl=impl,
+                                          attn_chunk=self.attn_chunk,
+                                          probs_bf16=self.probs_bf16,
+                                          seq_parallel=self.seq_parallel)
+                pc.append(st)
+            cache["prefix"] = pc
+
+        def body(x, pp):
+            states = {}
+            for j, desc in enumerate(self.period_descs):
+                x, st = _prefill_sublayer(pp[f"s{j}"], cfg, desc, x, positions,
+                                          capacity=capacity,
+                                          cache_dtype=cache_dtype,
+                                          attn_impl=impl, unroll=self.unroll,
+                                          attn_chunk=self.attn_chunk,
+                                          probs_bf16=self.probs_bf16,
+                                          seq_parallel=self.seq_parallel)
+                states[f"s{j}"] = st
+            return x, states
+
+        if self.unroll:
+            per = []
+            for i in range(self.n_periods):
+                x, st = body(x, jax.tree.map(lambda a: a[i], params["blocks"]))
+                per.append(st)
+            blocks = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *per)
+        else:
+            x, blocks = jax.lax.scan(body, x, params["blocks"])
+        cache["blocks"] = blocks
+        logits = self._head(params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B,1) int32; pos: scalar int32.  -> (logits (B,V), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        new_cache: Dict[str, Any] = {}
+        if self.prefix_descs:
+            pc = []
+            for i, desc in enumerate(self.prefix_descs):
+                x, st = _decode_sublayer(params["prefix"][i], cfg, desc, x,
+                                         cache["prefix"][i], pos,
+                                         mla_absorb=self.mla_absorb)
+                pc.append(st)
+            new_cache["prefix"] = pc
+
+        def body(x, xs):
+            pp, cc = xs
+            states = {}
+            for j, desc in enumerate(self.period_descs):
+                x, st = _decode_sublayer(pp[f"s{j}"], cfg, desc, x, cc[f"s{j}"],
+                                         pos, mla_absorb=self.mla_absorb)
+                states[f"s{j}"] = st
+            return x, states
+
+        if self.unroll:
+            per = []
+            for i in range(self.n_periods):
+                x, st = body(x, jax.tree.map(
+                    lambda a: a[i], (params["blocks"], cache["blocks"])))
+                per.append(st)
+            blocks = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *per)
+        else:
+            x, blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = blocks
+        logits = self._head(params, x)[:, 0]
+        return logits, new_cache
+
+    # -- loss ---------------------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: {"tokens": (B,S), "labels": (B,S), ["extra_embeds"]}."""
+        cfg = self.cfg
+        logits, aux = self.apply(params, batch["tokens"],
+                                 batch.get("extra_embeds"))
+        ce = softmax_xent(logits, batch["labels"])
+        total = ce + aux
+        if cfg.mtp_depth:
+            B, S = batch["tokens"].shape
+            # hidden for MTP: reuse logits path is wasteful; recompute head input
+            # cheaply by rerunning embed+blocks is too costly — instead MTP uses
+            # the *shifted tokens* directly as a one-layer LM (standard depth-1).
+            positions = make_positions(cfg, B, S - 1)
+            hidden = self._embed(params, batch["tokens"][:, :-1])
+            mtp_logits = self.mtp_logits(params, hidden, batch["tokens"][:, 1:],
+                                         positions)
+            total = total + 0.3 * softmax_xent(mtp_logits, batch["labels"][:, 1:])
+        return total
+
+
+def softmax_xent(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,235 @@
+"""xLSTM blocks — sLSTM (scalar memory, recurrent) + mLSTM (matrix memory)
+[arXiv:2405.04517].
+
+mLSTM is parallelizable (no hidden-to-hidden weights): we implement the
+stabilized recurrent form via `lax.scan` for training/prefill and a
+single-step update for decode.  State per layer: C (B,H,dk,dv),
+n (B,H,dk), m (B,H) — constant size, so xlstm runs long_500k natively.
+
+sLSTM has true recurrence (R matrices); it scans over time with
+block-diagonal per-head recurrent weights.  State: (h, c, n, m) each (B,di).
+
+Both blocks carry their own up/down projections (the assigned config has
+d_ff = 0: no separate FFN).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init
+from .config import ModelConfig
+
+EXPAND = 2  # projection factor for both block types
+
+
+def _dims(cfg: ModelConfig):
+    di = EXPAND * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def mlstm_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, H, dh = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "wq": dense_init(ks[1], (di, di), dtype=dtype),
+        "wk": dense_init(ks[2], (di, di), dtype=dtype),
+        "wv": dense_init(ks[3], (di, di), dtype=dtype),
+        "w_if": dense_init(ks[4], (di, 2 * H), dtype=jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.full((H,), 3.0)]).astype(jnp.float32),
+        "down": dense_init(ks[5], (di, d), dtype=dtype),
+    }
+
+
+def _mlstm_step(carry, xs):
+    C, n, m = carry                                     # (B,H,dk,dv),(B,H,dk),(B,H)
+    q_t, k_t, v_t, li_t, lf_t = xs
+    m_new = jnp.maximum(lf_t + m, li_t)
+    i_t = jnp.exp(li_t - m_new)                         # (B,H)
+    f_t = jnp.exp(lf_t + m - m_new)
+    C = f_t[..., None, None] * C + i_t[..., None, None] * \
+        (k_t[..., :, None] * v_t[..., None, :])
+    n = f_t[..., None] * n + i_t[..., None] * k_t
+    num = jnp.einsum("bhkv,bhk->bhv", C, q_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+    h_t = num / den[..., None]
+    return (C, n, m_new), h_t
+
+
+def mlstm_forward(p, cfg: ModelConfig, x, *, chunk_size: int = 64,
+                  remat: bool = False, unroll: bool = False):
+    """x: (B,S,d) -> (y, state).  Stabilized recurrence in checkpointed
+    time chunks: backward never holds more than one chunk of per-step
+    (B,H,dk,dv) matrix-memory residuals."""
+    B, S, d = x.shape
+    di, H, dh = _dims(cfg)
+    up = x @ p["up"]
+    xi, z = jnp.split(up, 2, axis=-1)                      # (B,S,di)
+    q = (xi @ p["wq"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    k = (xi @ p["wk"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    v = (xi @ p["wv"]).reshape(B, S, H, dh)
+    gates = xi.astype(jnp.float32) @ p["w_if"] + p["b_if"]  # (B,S,2H)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    ct = min(chunk_size, S)
+    if unroll:  # bound HLO size: at most 8 unrolled chunk bodies
+        ct = max(ct, -(-S // 8))
+    nc = -(-S // ct)
+    pad = nc * ct - S
+
+    def prep(a):  # (B,S,...) -> (nc, ct, B, ...)
+        if pad:  # log_f=0 => f=1 identity; log_i=-inf => i=0 no write
+            fill = 0.0 if a is log_f else (NEG_PAD if a is log_i else 0.0)
+            a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                        constant_values=fill)
+        a = jnp.moveaxis(a, 1, 0).reshape(nc, ct, B, *a.shape[2:])
+        return a
+
+    xs = tuple(prep(a) for a in
+               (q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), log_i, log_f))
+
+    def chunk_body(carry, xs_c):
+        carry, h_c = jax.lax.scan(_mlstm_step, carry, xs_c)
+        return carry, h_c                                   # (ct,B,H,dv)
+
+    if unroll:
+        st, hs = _mlstm_init(B, H, dh), []
+        for i in range(nc):
+            st, h_c = chunk_body(st, jax.tree.map(lambda a: a[i], xs))
+            hs.append(h_c)
+        state, h_seq = st, jnp.concatenate(hs, 0)
+    else:
+        body = chunk_body
+        if remat:
+            body = jax.checkpoint(chunk_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        state, h_seq = jax.lax.scan(body, _mlstm_init(B, H, dh), xs)
+        h_seq = h_seq.reshape(nc * ct, B, H, dh)
+    h = jnp.moveaxis(h_seq.reshape(nc * ct, B, H, dh), 0, 1)[:, :S]
+    h = h.reshape(B, S, di).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["down"]
+    return y, state
+
+
+NEG_PAD = -1e30
+
+
+def _mlstm_init(B, H, dh):
+    return (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, state):
+    """One token: x (B,1,d)."""
+    B = x.shape[0]
+    di, H, dh = _dims(cfg)
+    C, n, m = state
+    up = x @ p["up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = (xi @ p["wq"]).reshape(B, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    k = (xi @ p["wk"]).reshape(B, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    v = (xi @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = xi[:, 0].astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    m_new = jnp.maximum(lf + m, li)
+    i_t = jnp.exp(li - m_new)
+    f_t = jnp.exp(lf + m - m_new)
+    C = f_t[..., None, None] * C + i_t[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f_t[..., None] * n + i_t[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["down"]
+    return y, (C, n, m_new)
+
+
+def slstm_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, H, dh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "up": dense_init(ks[0], (d, di), dtype=dtype),
+        "W": dense_init(ks[1], (di, 4 * di), dtype=dtype),
+        # block-diagonal recurrent weights: (H, dh, 4*dh)
+        "R": dense_init(ks[2], (H, dh, 4 * dh), in_axis=1, dtype=jnp.float32),
+        "b": jnp.zeros((4 * di,), jnp.float32),
+        "down": dense_init(ks[3], (di, d), dtype=dtype),
+    }
+
+
+def _slstm_step(p, cfg: ModelConfig, wx_t, state):
+    """wx_t: (B,4di) precomputed W x_t.  state: (h,c,n,m) each (B,di)."""
+    di, H, dh = _dims(cfg)
+    h, c, n, m = state
+    rh = jnp.einsum("bhk,hkg->bhg", h.reshape(-1, H, dh), p["R"]).reshape(-1, 4 * di)
+    pre = wx_t.astype(jnp.float32) + rh + p["b"]
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    z_t = jnp.tanh(zi)
+    o_t = jax.nn.sigmoid(oi)
+    li = ii                                   # log-space input gate
+    lf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(lf + m, li)
+    i_t = jnp.exp(li - m_new)
+    f_t = jnp.exp(lf + m - m_new)
+    c_new = f_t * c + i_t * z_t
+    n_new = f_t * n + i_t
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p, cfg: ModelConfig, x, *, chunk_size: int = 64,
+                  remat: bool = False, unroll: bool = False):
+    B, S, d = x.shape
+    di, H, dh = _dims(cfg)
+    xi = x @ p["up"]
+    wx = xi @ p["W"]                                        # (B,S,4di)
+    state0 = tuple(jnp.zeros((B, di), jnp.float32) for _ in range(4))
+
+    ct = min(chunk_size, S)
+    if unroll:  # bound HLO size
+        ct = max(ct, -(-S // 8))
+    nc = -(-S // ct)
+    pad = nc * ct - S
+    if pad:
+        wx = jnp.pad(wx, ((0, 0), (0, pad), (0, 0)))
+    wx_c = jnp.moveaxis(wx, 1, 0).reshape(nc, ct, B, 4 * di)
+
+    def chunk_body(state, wx_chunk):
+        def step(st, wx_t):
+            new = _slstm_step(p, cfg, wx_t, st)
+            return new, new[0]
+        state, h_c = jax.lax.scan(step, state, wx_chunk)
+        return state, h_c
+
+    if unroll:
+        st, hs = state0, []
+        for i in range(nc):
+            st, h_c = chunk_body(st, wx_c[i])
+            hs.append(h_c)
+        state, h_seq = st, jnp.concatenate(hs, 0)
+    else:
+        body = chunk_body
+        if remat:
+            body = jax.checkpoint(chunk_body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        state, h_seq = jax.lax.scan(body, state0, wx_c)
+        h_seq = h_seq.reshape(nc * ct, B, di)
+    h = jnp.moveaxis(h_seq.reshape(nc * ct, B, di), 0, 1)[:, :S].astype(x.dtype)
+    return h @ p["down"], state
+
+
+def slstm_decode(p, cfg: ModelConfig, x, state):
+    xi = x @ p["up"]
+    wx = (xi @ p["W"])[:, 0]
+    new = _slstm_step(p, cfg, wx, state)
+    h = new[0][:, None, :].astype(x.dtype)
+    return h @ p["down"], new

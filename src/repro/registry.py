@@ -1,0 +1,60 @@
+"""Model registry — maps model names to invokable callables.
+
+The analogue of pointing a Tensor-Filter at a ``.tflite`` path: models
+register under a name and TensorFilter / SingleShot resolve them.
+Built-ins: "identity" plus lazy loaders for the 10 assigned architecture
+configs (reduced "smoke" variants, so a textual pipeline can reference
+``model=smollm-360m:smoke`` without multi-GiB allocation).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict
+
+_MODELS: Dict[str, Callable] = {}
+_LOCK = threading.Lock()
+
+
+def register_model(name: str, fn: Callable) -> None:
+    with _LOCK:
+        _MODELS[name] = fn
+
+
+def get_model(name: str) -> Callable:
+    with _LOCK:
+        if name in _MODELS:
+            return _MODELS[name]
+    fn = _try_lazy_load(name)
+    if fn is None:
+        raise ValueError(f"unknown model {name!r}; registered: {sorted(_MODELS)}")
+    register_model(name, fn)
+    return fn
+
+
+def _try_lazy_load(name: str) -> Callable | None:
+    """Resolve "<arch>:smoke" to a jitted forward fn of the reduced config."""
+    if not name.endswith(":smoke"):
+        return None
+    arch = name[: -len(":smoke")]
+    from .configs import get_config
+    try:
+        cfg = get_config(arch, smoke=True)
+    except KeyError:
+        return None
+    import jax
+    from .models import build_model
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def forward(tokens, *extra):
+        return model.apply(params, tokens, *extra)
+
+    return jax.jit(forward)
+
+
+def _register_builtins() -> None:
+    register_model("identity", lambda *xs: xs if len(xs) > 1 else xs[0])
+
+
+_register_builtins()

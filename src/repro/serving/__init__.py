@@ -1,0 +1,5 @@
+from .engine import ServeEngine, GenerationResult
+from .steps import make_prefill_step, make_decode_step
+
+__all__ = ["ServeEngine", "GenerationResult", "make_prefill_step",
+           "make_decode_step"]

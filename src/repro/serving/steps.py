@@ -1,0 +1,27 @@
+"""Jit-able serving step functions (also used by the dry-run)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model, capacity: int, cache_dtype=jnp.bfloat16):
+    def prefill_step(params, tokens, extra_embeds=None):
+        return model.prefill(params, tokens, capacity=capacity,
+                             extra_embeds=extra_embeds,
+                             cache_dtype=cache_dtype)
+    return prefill_step
+
+
+def make_decode_step(model, *, greedy: bool = True, temperature: float = 1.0):
+    def decode_step(params, cache, token, pos, rng=None):
+        """token: (B,1) -> (next_token (B,1), logits, cache)."""
+        logits, cache = model.decode_step(params, cache, token, pos)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+    return decode_step

@@ -1,0 +1,35 @@
+"""SingleShot — the paper's pipeline-less "Single API" (Tizen C/.NET, Android).
+
+Run one model with a unified interface, no pipeline required::
+
+    single = SingleShot(model="identity")
+    out = single.invoke(np.ones((4,)))
+
+Mirrors TensorFilter backend resolution, including jax / jax-sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+from .core.elements.filter import TensorFilter
+
+
+class SingleShot:
+    def __init__(self, model: Optional[str] = None, fn=None,
+                 framework: str = "python", device=None, mesh=None,
+                 in_shardings=None, out_shardings=None):
+        self._filter = TensorFilter(
+            "single", fn=fn, model=model, framework=framework, device=device,
+            mesh=mesh, in_shardings=in_shardings, out_shardings=out_shardings)
+
+    def invoke(self, *inputs: Any) -> Any:
+        out = self._filter.invoke(inputs)
+        return out[0] if len(out) == 1 else out
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self._filter.mean_latency_s
+
+    @property
+    def n_invocations(self) -> int:
+        return self._filter.n_invocations

@@ -1,0 +1,104 @@
+"""Serving correctness: prefill + decode_step == full forward, per arch.
+
+MoE capacity dropping is order-dependent (full-sequence routing can drop
+tokens that single-token decode keeps), so MoE archs are tested with a
+generous capacity factor — the discrepancy itself is capacity semantics,
+not a bug (see DESIGN.md).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.frontends import fake_audio_frames
+
+B, S = 2, 12
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True).replace(compute_dtype="float32")
+    if cfg.moe:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    extra = fake_audio_frames(cfg, B) if cfg.family == "audio" else None
+
+    logits_full, _ = model.apply(params, tokens, extra)
+    logits_pre, cache = model.prefill(params, tokens[:, :S - 1],
+                                      capacity=S + 4, extra_embeds=extra,
+                                      cache_dtype=jnp.float32)
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+    err_pre = float(jnp.max(jnp.abs(logits_pre - logits_full[:, -2])))
+    assert err_pre < 1e-3 * max(scale, 1.0), (arch, err_pre)
+
+    lp, cache = model.decode_step(params, cache, tokens[:, S - 1:],
+                                  jnp.int32(S - 1))
+    err = float(jnp.max(jnp.abs(lp - logits_full[:, -1])))
+    assert err < 1e-3 * max(scale, 1.0), (arch, err)
+
+
+def test_multi_token_decode_chain():
+    """Decode 4 tokens sequentially; each must match the full forward."""
+    cfg = get_config("glm4-9b", smoke=True).replace(compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                cfg.vocab_size)
+    logits_full, _ = model.apply(params, tokens)
+    k = 4
+    _, cache = model.prefill(params, tokens[:, : S - k], capacity=S + 2,
+                             cache_dtype=jnp.float32)
+    for i in range(k):
+        pos = S - k + i
+        lp, cache = model.decode_step(params, cache, tokens[:, pos:pos + 1],
+                                      jnp.int32(pos))
+        err = float(jnp.max(jnp.abs(lp - logits_full[:, pos])))
+        assert err < 2e-3, (i, err)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    """Ring-buffer decode == full forward with the same window mask."""
+    cfg = get_config("smollm-360m", smoke=True).replace(
+        compute_dtype="float32", sliding_window=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                cfg.vocab_size)
+    logits_full, _ = model.apply(params, tokens)
+    _, cache = model.prefill(params, tokens[:, :S - 1], capacity=S,
+                             cache_dtype=jnp.float32)
+    # ring capacity == window
+    assert cache["blocks"]["s0"]["k"].shape[3] == 6 or \
+        cache["blocks"]["s0"]["k"].shape[2] == 6
+    lp, _ = model.decode_step(params, cache, tokens[:, S - 1:],
+                              jnp.int32(S - 1))
+    err = float(jnp.max(jnp.abs(lp - logits_full[:, -1])))
+    assert err < 2e-3, err
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    """DeepSeek-V3 absorbed-matrix decode == naive cache expansion."""
+    cfg = get_config("deepseek-v3-671b", smoke=True).replace(
+        compute_dtype="float32",
+        moe=dataclasses.replace(
+            get_config("deepseek-v3-671b", smoke=True).moe,
+            capacity_factor=8.0))
+    m_naive = build_model(cfg, mla_absorb=False)
+    m_abs = build_model(cfg, mla_absorb=True)
+    params = m_naive.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                                cfg.vocab_size)
+    _, cache = m_naive.prefill(params, tokens[:, :S - 1], capacity=S + 2,
+                               cache_dtype=jnp.float32)
+    l1, _ = m_naive.decode_step(params, cache, tokens[:, S - 1:],
+                                jnp.int32(S - 1))
+    l2, _ = m_abs.decode_step(params, cache, tokens[:, S - 1:],
+                              jnp.int32(S - 1))
+    err = float(jnp.max(jnp.abs(l1 - l2)))
+    assert err < 2e-3, err

@@ -1,0 +1,180 @@
+"""Per-element behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.core import Buffer, parse_pipeline
+from repro.core.elements import (TensorAggregator, TensorIf, TensorRate,
+                                 TensorRepo, TensorTransform)
+from repro.core.elements.converter import TensorConverter, TensorDecoder
+from repro.core.elements.sinks import TensorSink
+
+
+def _feed(element, arrays, pts=None):
+    """Wire element -> sink, push arrays, return collected buffers."""
+    sink = TensorSink("sink", keep=True)
+    element.link(sink)
+    for i, a in enumerate(arrays):
+        element.chain(element.sinkpad, Buffer(a, pts=pts[i] if pts else float(i)))
+    return sink.buffers
+
+
+def test_converter_video_to_float():
+    conv = TensorConverter("c", mode="video", to_float=True)
+    out = _feed(conv, [np.full((4, 4, 3), 255, np.uint8)])
+    assert out[0].data.dtype == np.float32
+    assert np.allclose(out[0].data, 1.0)
+
+
+def test_converter_text():
+    conv = TensorConverter("c", mode="text", text_size=8)
+    out = _feed(conv, ["hi"])
+    assert out[0].data.shape == (8,)
+    assert out[0].data[0] == ord("h")
+
+
+def test_decoder_argmax_label():
+    dec = TensorDecoder("d", mode="argmax_label")
+    out = _feed(dec, [np.array([0.1, 0.9, 0.2], np.float32)])
+    assert out[0].meta["label"] == 1
+
+
+def test_decoder_bounding_boxes():
+    dec = TensorDecoder("d", mode="bounding_boxes")
+    out = _feed(dec, [np.array([[1, 2, 3, 4, 0.9]], np.float32)])
+    assert out[0].meta["boxes"][0]["score"] == pytest.approx(0.9)
+
+
+def test_decoder_overlay_draws_box():
+    dec = TensorDecoder("d", mode="overlay", width=32, height=32)
+    out = _feed(dec, [np.array([[4, 4, 10, 10, 0.9]], np.float32)])
+    frame = out[0].data
+    assert frame.shape == (32, 32, 4)
+    assert frame[4, 4, 1] == 255  # green box corner
+
+
+def test_transform_chain():
+    tr = TensorTransform("t", option="typecast:float32,divide:2.0,add:1.0")
+    out = _feed(tr, [np.array([2, 4], np.uint8)])
+    assert np.allclose(out[0].data, [2.0, 3.0])
+
+
+def test_transform_transpose():
+    tr = TensorTransform("t", option="transpose:1:0")
+    out = _feed(tr, [np.arange(6).reshape(2, 3)])
+    assert out[0].data.shape == (3, 2)
+
+
+def test_transform_fused_backend_matches_numpy():
+    chain = "typecast:float32,divide:255.0,subtract:0.5,clamp:-0.4:0.4"
+    a = TensorTransform("a", option=chain, backend="numpy")
+    b = TensorTransform("b", option=chain, backend="fused")
+    x = np.arange(256, dtype=np.uint8).reshape(16, 16)
+    ya = _feed(a, [x])[0].data
+    yb = _feed(b, [x])[0].data
+    np.testing.assert_allclose(ya, yb, atol=1e-6)
+
+
+def test_aggregator_halves_rate():
+    agg = TensorAggregator("a", frames_in=2)
+    out = _feed(agg, [np.full((3,), i, np.float32) for i in range(6)])
+    assert len(out) == 3
+    assert out[0].data.shape == (6,)
+    # output timestamp = latest input (paper)
+    assert out[0].pts == 1.0
+
+
+def test_aggregator_overlapping_windows():
+    agg = TensorAggregator("a", frames_in=4, frames_flush=2)
+    out = _feed(agg, [np.full((1,), i, np.float32) for i in range(8)])
+    assert len(out) == 3  # windows at 0-3, 2-5, 4-7
+    assert np.allclose(out[1].data, [2, 3, 4, 5])
+
+
+def test_rate_throttles():
+    rate = TensorRate("r", framerate=1.0)
+    pts = [0.0, 0.3, 0.6, 1.0, 1.4, 2.0]
+    out = _feed(rate, [np.zeros(1) for _ in pts], pts=pts)
+    assert [b.pts for b in out] == [0.0, 1.0, 2.0]
+    assert rate.n_dropped == 3
+
+
+def test_tensor_if_routes_both_ways():
+    ti = TensorIf("i", reduction="mean", compare="gt", value=0.0)
+    t_sink, f_sink = TensorSink("t", keep=True), TensorSink("f", keep=True)
+    ti.srcpads["src_true"].link(t_sink.sinkpad)
+    ti.srcpads["src_false"].link(f_sink.sinkpad)
+    ti.chain(ti.sinkpad, Buffer(np.array([1.0])))
+    ti.chain(ti.sinkpad, Buffer(np.array([-1.0])))
+    assert t_sink.n_received == 1 and f_sink.n_received == 1
+
+
+def test_repo_recurrence():
+    TensorRepo.reset()
+    pipe = parse_pipeline(
+        "appsrc name=src ! tensor_reposrc name=rs slot=state seed_shape=2 ! "
+        "tensor_filter framework=python model=step ! tee name=t num_src_pads=2 "
+        "t.src_0 ! tensor_sink name=out keep=true "
+        "t.src_1 ! tensor_reposink slot=state",
+        models={"step": lambda x, state: np.asarray(x, np.float32) + state})
+    pipe.start()
+    for _ in range(3):
+        pipe["src"].push(np.ones(2, np.float32))
+    pipe["src"].end_of_stream()
+    pipe.stop()
+    outs = [b.data for b in pipe["out"].buffers]
+    # recurrent accumulation: 1, 2, 3
+    np.testing.assert_allclose(outs[0], [1, 1])
+    np.testing.assert_allclose(outs[1], [2, 2])
+    np.testing.assert_allclose(outs[2], [3, 3])
+
+
+def test_mux_zero_copy_and_demux_roundtrip():
+    pipe = parse_pipeline(
+        "appsrc name=a ! mux.sink_0 appsrc name=b ! mux.sink_1 "
+        "tensor_mux name=mux num_sinks=2 ! tensor_demux num_src_pads=2 "
+        "name=dm dm.src_0 ! tensor_sink name=o0 keep=true "
+        "dm.src_1 ! tensor_sink name=o1 keep=true")
+    pipe.start()
+    xa, xb = np.arange(3.0), np.arange(4.0)
+    pipe["a"].push(xa, pts=0.0)
+    pipe["b"].push(xb, pts=0.0)
+    pipe.stop()
+    assert np.array_equal(pipe["o0"].buffers[0].data, xa)
+    assert np.array_equal(pipe["o1"].buffers[0].data, xb)
+
+
+def test_merge_dimension_algebra():
+    # paper: two 3x4 streams -> 6x4 (concat gst dim 0 = np last dim? no:
+    # gst 3x4 == np (4,3); concat gst dim 0 -> 6x4 == np (4,6)
+    pipe = parse_pipeline(
+        "appsrc name=a ! m.sink_0 appsrc name=b ! m.sink_1 "
+        "tensor_merge name=m num_sinks=2 mode=concat:0 ! tensor_sink name=o keep=true")
+    pipe.start()
+    pipe["a"].push(np.zeros((4, 3)), pts=0.0)
+    pipe["b"].push(np.ones((4, 3)), pts=0.0)
+    pipe.stop()
+    assert pipe["o"].buffers[0].data.shape == (4, 6)
+
+
+def test_split_segments():
+    pipe = parse_pipeline(
+        "appsrc name=a ! tensor_split name=sp tensorseg=2.4 "
+        "sp.src_0 ! tensor_sink name=o0 keep=true "
+        "sp.src_1 ! tensor_sink name=o1 keep=true")
+    pipe.start()
+    pipe["a"].push(np.arange(6.0))
+    pipe.stop()
+    assert pipe["o0"].buffers[0].data.shape == (2,)
+    assert pipe["o1"].buffers[0].data.shape == (4,)
+
+
+def test_valve_and_selector():
+    pipe = parse_pipeline(
+        "appsrc name=a ! valve name=v drop=true ! fakesink name=o")
+    pipe.start()
+    pipe["a"].push(np.zeros(1))
+    assert pipe["o"].n_received == 0
+    pipe["v"].drop = False
+    pipe["a"].push(np.zeros(1))
+    assert pipe["o"].n_received == 1
+    pipe.stop()

@@ -1,0 +1,141 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(0)
+
+
+# -- transform ----------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5,), (7, 13), (3, 33, 5), (2, 8, 128)])
+@pytest.mark.parametrize("dtype", [np.uint8, np.float32])
+def test_transform_kernel(shape, dtype):
+    from repro.kernels.transform import ops
+    from repro.kernels.transform.ref import fused_transform_ref
+    x = (rng.random(shape) * 200).astype(dtype)
+    y = ops.fused_transform(x, scale=1 / 255.0, bias=-0.4, lo=-0.3, hi=0.3,
+                            out_dtype=jnp.float32)
+    yr = fused_transform_ref(jnp.asarray(x), 1 / 255.0, -0.4, -0.3, 0.3,
+                             jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-6)
+
+
+# -- moe gating ------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,E,k", [(7, 8, 2), (64, 16, 4), (130, 256, 8),
+                                   (520, 16, 1)])
+def test_gating_kernel(T, E, k):
+    from repro.kernels.moe_gating import ops
+    from repro.kernels.moe_gating.ref import topk_ref
+    s = rng.standard_normal((T, E)).astype(np.float32)
+    v, i = ops.topk(jnp.asarray(s), k)
+    vr, ir = topk_ref(jnp.asarray(s), k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-6)
+    assert np.array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_gating_batched_shape():
+    from repro.kernels.moe_gating import ops
+    s = rng.standard_normal((2, 9, 16)).astype(np.float32)
+    v, i = ops.topk(jnp.asarray(s), 3)
+    assert v.shape == (2, 9, 3) and i.shape == (2, 9, 3)
+
+
+# -- flash attention ---------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,S,hd,bq,bk", [
+    (1, 2, 2, 32, 16, 16, 16),      # MHA
+    (2, 4, 2, 64, 32, 32, 32),      # GQA
+    (1, 8, 1, 48, 64, 16, 16),      # MQA, non-pow2 seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(B, H, KV, S, hd, bq, bk, dtype):
+    from repro.kernels.flash_attention import ops
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd), dtype)
+    o = ops.flash_attention_bshd(q, k, v, causal=True, block_q=bq, block_k=bk)
+    orf = attention_ref(jnp.moveaxis(q, 2, 1).astype(jnp.float32),
+                        jnp.moveaxis(k, 2, 1).astype(jnp.float32),
+                        jnp.moveaxis(v, 2, 1).astype(jnp.float32), causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(o, 2, 1), np.float32),
+                               np.asarray(orf), atol=tol, rtol=tol)
+
+
+def test_flash_attention_sliding_window():
+    from repro.kernels.flash_attention import ops
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, S, H, hd, w = 1, 64, 2, 16, 24
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    o = ops.flash_attention_bshd(q, k, v, causal=True, sliding_window=w,
+                                 block_q=16, block_k=16)
+    orf = attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                        jnp.moveaxis(v, 2, 1), causal=True, sliding_window=w)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(o, 2, 1)),
+                               np.asarray(orf), atol=1e-5, rtol=1e-5)
+
+
+# -- decode attention -----------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,C,hd,length", [
+    (2, 4, 2, 96, 32, 70), (1, 8, 8, 64, 64, 64), (3, 6, 2, 40, 16, 1),
+])
+def test_decode_attention_kernel(B, H, KV, C, hd, length):
+    from repro.kernels.decode_attention import ops
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, C, KV, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, C, KV, hd))
+    o = ops.decode_attention_bhd(q, kc, vc, length, block_k=32)
+    orf = decode_attention_ref(q[:, 0], jnp.moveaxis(kc, 2, 1),
+                               jnp.moveaxis(vc, 2, 1), length)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(orf),
+                               atol=1e-5, rtol=1e-5)
+
+
+# -- ssm scan -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,di,N,bd,ct", [
+    (1, 16, 32, 4, 16, 8), (2, 48, 96, 8, 32, 16), (1, 100, 64, 16, 64, 32),
+])
+def test_ssm_scan_kernel(B, S, di, N, bd, ct):
+    from repro.kernels.ssm_scan import ops
+    from repro.kernels.ssm_scan.ref import selective_scan_ref
+    dt = jnp.asarray(rng.random((B, S, di)).astype(np.float32) * 0.1)
+    xs = jnp.asarray(rng.standard_normal((B, S, di)).astype(np.float32))
+    Bc = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    Cc = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    A = -jnp.asarray(rng.random((di, N)).astype(np.float32))
+    D = jnp.ones((di,), jnp.float32)
+    y, h = ops.selective_scan(dt, Bc, Cc, xs, A, D, block_d=bd, chunk_t=ct)
+    yr, hr = selective_scan_ref(dt, Bc, Cc, xs, A, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-5,
+                               rtol=2e-4)
+
+
+def test_ssm_scan_matches_model_path():
+    """Kernel == the model's pure-jnp selective_scan."""
+    from repro.kernels.ssm_scan import ops
+    from repro.models.mamba import selective_scan
+    B, S, di, N = 2, 32, 64, 8
+    dt = jnp.asarray(rng.random((B, S, di)).astype(np.float32) * 0.1)
+    xs = jnp.asarray(rng.standard_normal((B, S, di)).astype(np.float32))
+    Bc = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    Cc = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    A = -jnp.asarray(rng.random((di, N)).astype(np.float32))
+    D = jnp.ones((di,), jnp.float32)
+    y1, h1 = selective_scan(dt, Bc, Cc, xs, A, D)
+    y2, h2 = ops.selective_scan(dt, Bc, Cc, xs, A, D, block_d=32, chunk_t=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5,
+                               rtol=2e-4)

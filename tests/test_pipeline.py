@@ -1,0 +1,108 @@
+"""Pipeline/parser/scheduler behaviour."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Pipeline, PipelineError, parse_pipeline
+from repro.core.elements import Queue
+from repro.core.stream import Buffer
+from repro.single import SingleShot
+
+
+def test_parser_chain_and_props():
+    p = parse_pipeline("videotestsrc num_buffers=3 width=8 height=8 ! "
+                       "tensor_converter ! fakesink name=out")
+    assert set(p.elements) >= {"out"}
+    p.run_until_eos(timeout=20)
+    assert p["out"].n_received == 3
+
+
+def test_parser_forward_references():
+    p = parse_pipeline(
+        "appsrc name=a ! m.sink_0 appsrc name=b ! m.sink_1 "
+        "tensor_mux name=m num_sinks=2 ! fakesink name=out")
+    p.start()
+    p["a"].push(np.zeros(2), pts=0.0)
+    p["b"].push(np.zeros(2), pts=0.0)
+    assert p["out"].n_received == 1
+    p.stop()
+
+
+def test_parser_errors():
+    with pytest.raises(ValueError):
+        parse_pipeline("nosuchelement ! fakesink")
+    with pytest.raises(ValueError):
+        parse_pipeline("appsrc name=a !")
+
+
+def test_error_bus_propagates():
+    def boom(x):
+        raise RuntimeError("boom")
+
+    p = parse_pipeline(
+        "videotestsrc num_buffers=3 width=8 height=8 ! queue ! "
+        "tensor_filter framework=python model=boom ! fakesink name=out",
+        models={"boom": boom})
+    with pytest.raises(PipelineError):
+        p.run_until_eos(timeout=20)
+
+
+def test_queue_leaky_downstream_drops():
+    q = Queue("q", max_size=2, leaky="downstream")
+    # not started: worker not draining, so puts beyond capacity drop
+    for i in range(5):
+        q._running = True
+        q.chain(q.sinkpad, Buffer(np.zeros(1), pts=float(i)))
+    assert q.n_dropped == 3
+
+
+def test_duplicate_element_names_rejected():
+    with pytest.raises(ValueError):
+        parse_pipeline("appsrc name=x ! fakesink name=x")
+
+
+def test_caps_negotiation_failure_at_link():
+    from repro.core.element import Element
+    from repro.core.stream import TensorSpec
+
+    up = Element("up")
+    up.add_src_pad(spec=TensorSpec(dims=(4,), dtype="float32"))
+    down = Element("down")
+    down.add_sink_pad(spec=TensorSpec(dims=(5,), dtype="float32"))
+    with pytest.raises(ValueError, match="caps negotiation failed"):
+        up.link(down)
+
+
+def test_single_api_latency_stats():
+    s = SingleShot(fn=lambda x: x * 2)
+    for _ in range(4):
+        s.invoke(np.ones(3))
+    assert s.n_invocations == 4
+    assert s.mean_latency_s >= 0.0
+    np.testing.assert_allclose(s.invoke(np.ones(3)), 2 * np.ones(3))
+
+
+def test_jax_backend_filter():
+    import jax.numpy as jnp
+    s = SingleShot(fn=lambda x: jnp.tanh(x).sum(), framework="jax")
+    out = np.asarray(s.invoke(np.ones((4, 4), np.float32)))
+    assert np.isfinite(out)
+
+
+def test_end_to_end_multimodal_system():
+    """System test: camera + sensor fused by mux into a joint model."""
+    def fusion(img, sensor):
+        return np.concatenate([np.asarray(img, np.float32).reshape(-1)[:4],
+                               np.asarray(sensor, np.float32)])
+
+    p = parse_pipeline(
+        "videotestsrc num_buffers=6 width=8 height=8 ! tensor_converter "
+        "to_float=true ! mux.sink_0 "
+        "sensorsrc num_buffers=6 channels=3 ! mux.sink_1 "
+        "tensor_mux name=mux num_sinks=2 sync=slowest ! queue ! "
+        "tensor_filter framework=python model=fusion ! "
+        "tensor_sink name=out keep=true", models={"fusion": fusion})
+    p.run_until_eos(timeout=30)
+    assert p["out"].n_received == 6
+    assert p["out"].buffers[0].data.shape == (7,)

@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) on framework invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Buffer, parse_pipeline
+from repro.core.elements.routing import TensorMerge, TensorMux
+from repro.core.elements.transform import (apply_chain_numpy, fold_affine,
+                                           parse_chain)
+from repro.core.stream import TensorSpec
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+dims_st = st.lists(st.integers(1, 16), min_size=1, max_size=4)
+
+
+@given(dims_st)
+def test_caps_trailing_ones_equivalent(dims):
+    a = TensorSpec(dims=tuple(dims))
+    b = TensorSpec(dims=tuple(dims) + (1, 1))
+    assert a.compatible(b) and b.compatible(a)
+
+
+@given(dims_st, st.sampled_from(["float32", "uint8", "int32"]))
+def test_spec_shape_roundtrip(dims, dtype):
+    spec = TensorSpec(dims=tuple(dims), dtype=dtype)
+    arr = np.zeros(spec.shape, dtype=dtype)
+    assert TensorSpec.from_array(arr).compatible(spec)
+
+
+@given(st.integers(1, 8), st.integers(1, 5))
+def test_mux_demux_roundtrip(n_tensors, length):
+    arrays = [np.random.rand(length + i) for i in range(n_tensors)]
+    buf = Buffer(tuple(arrays), pts=1.0)
+    # zero-copy: rebundling preserves identity and order
+    out = buf.with_chunks(buf.chunks)
+    for a, b in zip(arrays, out.chunks):
+        assert a is b
+
+
+@given(st.integers(2, 5), st.integers(1, 4), st.integers(1, 4))
+def test_merge_concat_shape(n, rows, cols):
+    """N gst (cols x rows) tensors concat on gst dim0 -> cols*N x rows."""
+    merge = TensorMerge("m", num_sinks=n, mode="concat:0")
+    arrays = [np.random.rand(rows, cols) for _ in range(n)]
+    out = merge.combine([Buffer(a, pts=float(i)) for i, a in enumerate(arrays)])
+    assert out.data.shape == (rows, cols * n)
+    # latest timestamp (paper)
+    assert out.pts == float(n - 1)
+
+
+@given(st.lists(st.sampled_from(
+    ["typecast:float32", "add:1.5", "subtract:0.25", "multiply:2.0",
+     "divide:4.0"]), min_size=1, max_size=5))
+def test_fold_affine_equals_sequential(ops_list):
+    chain = ",".join(ops_list)
+    ops = parse_chain(chain)
+    folded = fold_affine(ops)
+    assert folded is not None
+    scale, bias, lo, hi, dtype = folded
+    x = np.linspace(-8, 8, 33, dtype=np.float32)
+    seq = apply_chain_numpy(x, ops)
+    fused = np.clip(x * scale + bias, lo, hi)
+    np.testing.assert_allclose(seq, fused, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(5, 30))
+def test_aggregator_window_count(frames_in, flush, n):
+    flush = min(flush, frames_in)  # element clamps stride to window size
+    from repro.core.elements.aggregator import TensorAggregator
+    from repro.core.elements.sinks import TensorSink
+    agg = TensorAggregator("a", frames_in=frames_in, frames_flush=flush)
+    sink = TensorSink("s", keep=True)
+    agg.link(sink)
+    for i in range(n):
+        agg.chain(agg.sinkpad, Buffer(np.zeros(2), pts=float(i)))
+    expected = max((n - frames_in) // flush + 1, 0) if n >= frames_in else 0
+    assert sink.n_received == expected
+    for b in sink.buffers:
+        assert b.data.shape == (2 * frames_in,)
+
+
+@given(st.integers(2, 16), st.integers(1, 8))
+def test_moe_position_in_expert_is_a_valid_ranking(E, k):
+    import jax.numpy as jnp
+    from repro.models.moe import _position_in_expert
+    rng = np.random.default_rng(E * 31 + k)
+    flat = rng.integers(0, E, size=(24 * k,))
+    pos = np.asarray(_position_in_expert(jnp.asarray(flat), E))
+    for e in range(E):
+        ranks = sorted(pos[flat == e])
+        assert ranks == list(range(len(ranks)))

@@ -1,0 +1,112 @@
+"""Sharding-rule unit tests + a small-mesh dry-run smoke (subprocess:
+the host device count flag must precede jax init)."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.sharding import cache_specs, param_specs
+
+
+def _leaves_with_paths(tree):
+    return {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path): leaf
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def test_param_specs_match_rank_and_rules():
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, dp=("data",))
+    shape_leaves = _leaves_with_paths(shapes)
+    spec_leaves = _leaves_with_paths(specs)
+    for path, spec in spec_leaves.items():
+        assert len(spec) <= shape_leaves[path].ndim, path
+    # spot checks
+    assert spec_leaves["embed"] == P("model", "data")
+    assert spec_leaves["blocks/s0/attn/wq"] == P(None, "data", "model")
+    assert spec_leaves["blocks/s0/mlp/w_down"] == P(None, "model", "data")
+
+
+def test_param_specs_divisibility_filter():
+    cfg = get_config("whisper-tiny", smoke=False)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, dp=("data",),
+                        axis_sizes={"data": 16, "model": 16})
+    leaves = _leaves_with_paths(specs)
+    # vocab 51865 is not divisible by 16 -> model axis dropped from embed
+    assert leaves["embed"][0] is None
+
+
+def test_moe_expert_parallel_specs():
+    cfg = get_config("dbrx-132b", smoke=True)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, dp=("data",))
+    leaves = _leaves_with_paths(specs)
+    assert leaves["blocks/s0/moe/w_gate"][1] == "model"  # experts on TP axis
+
+
+def test_cache_specs_batch1_shards_sequence():
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(1, 512))
+    specs = cache_specs(cache, dp=("data",), shard_seq_when_batch1=True)
+    k_spec = specs["blocks"]["s0"]["k"]
+    assert k_spec[2] == "data"  # sequence dim sharded for batch-1
+
+
+def test_cache_specs_batched_decode_shards_batch():
+    cfg = get_config("glm4-9b", smoke=True)
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 512))
+    specs = cache_specs(cache, dp=("data",), shard_seq_when_batch1=False)
+    k_spec = specs["blocks"]["s0"]["k"]
+    assert k_spec[1] == "data"
+
+
+DRYRUN_SMOKE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.sharding import param_specs
+from repro.training import TrainState, make_train_step
+from repro.optim import adamw_init
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+cfg = get_config("smollm-360m", smoke=True)
+model = build_model(cfg, remat=True)
+params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+pspecs = param_specs(params_s, dp=("data",), axis_sizes={"data": 2, "model": 2})
+state_s = jax.eval_shape(lambda p: TrainState(p, adamw_init(p)), params_s)
+state_specs = TrainState(params=pspecs,
+                         opt=type(state_s.opt)(step=P(), m=pspecs, v=pspecs))
+state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
+batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+batch_sh = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+step = make_train_step(model)
+with mesh:
+    lowered = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(state_s, batch)
+    compiled = lowered.compile()
+print("COMPILED_OK", compiled.cost_analysis().get("flops", 0) > 0)
+"""
+
+
+def test_dryrun_smoke_on_4_host_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", DRYRUN_SMOKE], env=env,
+                         capture_output=True, text=True, timeout=300,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "COMPILED_OK True" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,73 @@
+"""Caps (stream type) negotiation — the other/tensor(s) semantics."""
+import numpy as np
+import pytest
+
+from repro.core.stream import (Buffer, MediaSpec, TensorSpec, TensorsSpec,
+                               specs_compatible)
+
+
+def test_rank_agnostic_equivalence():
+    a = TensorSpec.parse("640:480")
+    b = TensorSpec.parse("640:480:1:1")
+    assert a.compatible(b) and b.compatible(a)
+
+
+def test_rank_pinning_tensorrt_style():
+    a = TensorSpec.parse("640:480")
+    b = TensorSpec(dims=(640, 480, 1, 1), require_rank=True)
+    assert not a.compatible(b)
+    c = TensorSpec(dims=(640, 480, 1, 1), require_rank=True)
+    assert b.compatible(c)
+
+
+def test_dtype_mismatch():
+    a = TensorSpec(dims=(4,), dtype="float32")
+    b = TensorSpec(dims=(4,), dtype="uint8")
+    assert not a.compatible(b)
+
+
+def test_framerate_negotiation():
+    a = TensorSpec(dims=(4,), framerate=30.0)
+    b = TensorSpec(dims=(4,), framerate=20.0)
+    c = TensorSpec(dims=(4,))  # don't-care
+    assert not a.compatible(b)
+    assert a.compatible(c)
+
+
+def test_tensors_bundle_limits():
+    with pytest.raises(ValueError):
+        TensorsSpec(tuple(TensorSpec(dims=(1,)) for _ in range(17)))
+    spec = TensorsSpec((TensorSpec(dims=(3, 4)), TensorSpec(dims=(3, 4))))
+    assert spec.num_tensors == 2
+
+
+def test_single_tensor_promotes_to_bundle():
+    a = TensorSpec(dims=(8,))
+    b = TensorsSpec((TensorSpec(dims=(8,)),))
+    assert specs_compatible(a, b) and specs_compatible(b, a)
+
+
+def test_media_vs_tensor_incompatible():
+    assert not specs_compatible(MediaSpec("video/x-raw"), TensorSpec(dims=(4,)))
+
+
+def test_buffer_zero_copy_chunks():
+    x = np.arange(12.0).reshape(3, 4)
+    y = np.ones((2, 2))
+    buf = Buffer((x, y), pts=1.0)
+    assert buf.chunks[0] is x and buf.chunks[1] is y
+    re = buf.with_chunks((buf.chunks[1],))
+    assert re.chunks[0] is y and re.pts == 1.0
+
+
+def test_buffer_spec_roundtrip():
+    buf = Buffer(np.zeros((5, 7), np.float32))
+    spec = buf.spec()
+    assert spec.shape == (5, 7)
+    assert spec.dtype == "float32"
+
+
+def test_spec_nbytes_and_shape():
+    s = TensorSpec.parse("640:480:3", dtype="uint8")
+    assert s.shape == (3, 480, 640)
+    assert s.nbytes == 640 * 480 * 3

@@ -1,0 +1,65 @@
+"""Mux/Merge synchronization policies (paper §III)."""
+import numpy as np
+
+from repro.core.stream import Buffer
+from repro.core.sync import SyncCollector, SyncPolicy
+
+
+def _buf(v, pts):
+    return Buffer(np.array([v], np.float32), pts=pts)
+
+
+def test_parse():
+    assert SyncPolicy.parse("slowest") == ("slowest", 0)
+    assert SyncPolicy.parse("fastest") == ("fastest", 0)
+    assert SyncPolicy.parse("base:1") == ("base", 1)
+
+
+def test_slowest_drops_fast_source_frames():
+    c = SyncCollector(2, policy=SyncPolicy.SLOWEST)
+    # source 0 at 10 Hz (0.0,0.1,0.2,...), source 1 at 5 Hz (0.0,0.2,...)
+    got = []
+    for i in range(6):
+        r = c.offer(0, _buf(i, i * 0.1))
+        if r:
+            got.append([b.data[0] for b in r])
+        if i % 2 == 0:
+            r = c.offer(1, _buf(i, i * 0.1))
+            if r:
+                got.append([b.data[0] for b in r])
+    # every emit pairs one frame of each; fast source's stale frames drop
+    assert all(len(g) == 2 for g in got)
+    assert len(got) == 3  # rate of the slowest source
+
+
+def test_fastest_duplicates_slow_source():
+    c = SyncCollector(2, policy=SyncPolicy.FASTEST)
+    c.offer(0, _buf(0, 0.0))
+    r = c.offer(1, _buf(100, 0.0))
+    assert r is not None
+    emitted = 1
+    for i in range(1, 5):
+        r = c.offer(0, _buf(i, i * 0.1))
+        if r is not None:
+            emitted += 1
+            assert r[1].data[0] == 100  # slow source duplicated
+    assert emitted == 5
+
+
+def test_base_locks_to_designated_source():
+    c = SyncCollector(2, policy=SyncPolicy.BASE, base_index=1)
+    c.offer(0, _buf(1, 0.0))
+    c.offer(0, _buf(2, 0.1))
+    c.offer(0, _buf(3, 0.2))
+    r = c.offer(1, _buf(99, 0.19))
+    assert r is not None
+    assert r[1].data[0] == 99
+    assert r[0].data[0] == 3  # nearest to base pts
+
+
+def test_eos_tracking():
+    c = SyncCollector(2)
+    c.offer(0, Buffer.eos_buffer())
+    assert not c.all_eos()
+    c.offer(1, Buffer.eos_buffer())
+    assert c.all_eos()

@@ -1,0 +1,29 @@
+"""End-to-end behaviour tests for the reproduced system."""
+import numpy as np
+
+from repro.core import parse_pipeline
+
+
+def test_paper_figure1_style_pipeline():
+    """The paper's exemplary pipeline shape: camera -> converter ->
+    transform -> two NN branches (tee) -> decoder/sink."""
+    def nn1(x):
+        return np.asarray(x, np.float32).mean(axis=(0, 1))
+
+    def nn2(x):
+        return np.asarray([[2, 2, 4, 4, 0.9]], np.float32)
+
+    p = parse_pipeline(
+        "videotestsrc num_buffers=8 width=16 height=16 ! "
+        "tensor_converter to_float=true ! "
+        "tensor_transform option=multiply:2.0 ! tee name=t num_src_pads=2 "
+        "t.src_0 ! queue ! tensor_filter framework=python model=nn1 ! "
+        "tensor_decoder mode=argmax_label ! tensor_sink name=labels keep=true "
+        "t.src_1 ! queue ! tensor_filter framework=python model=nn2 ! "
+        "tensor_decoder mode=bounding_boxes ! tensor_sink name=boxes keep=true",
+        models={"nn1": nn1, "nn2": nn2})
+    p.run_until_eos(timeout=30)
+    assert p["labels"].n_received == 8
+    assert p["boxes"].n_received == 8
+    assert "label" in p["labels"].buffers[0].meta
+    assert p["boxes"].buffers[0].meta["boxes"][0]["score"] > 0
