@@ -1,0 +1,102 @@
+"""E5 — micro-batching: throughput vs batch size + bucket-cache
+recompile accounting.
+
+Analogs on this host:
+  * throughput vs batch: the same per-frame model driven through
+    appsrc -> tensor_batcher(max_batch=k) -> tensor_filter ->
+    tensor_unbatcher -> fakesink at k in {1,2,4,8}.  Per-invocation
+    overhead (python dispatch, BLAS call setup, pipeline pads) is
+    amortized across the batch — the paper's pipelined-filter
+    amortization argument extended across stream frames.
+  * bucket cache: a jitted filter fed every batch size 1..8 must
+    compile at most log2(max_batch)+1 = 4 variants (one per power-of-2
+    bucket), not 8.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import parse_pipeline
+from repro.core.elements.filter import TensorFilter
+
+D = 256      # weight-bound at small n: a (n,D)@(D,D) GEMM costs nearly the
+LAYERS = 8   # same for n=1 and n=8, so batching amortizes the weight fetch
+N_FRAMES = 512
+
+
+def _make_mlp():
+    rng = np.random.default_rng(7)
+    ws = [rng.standard_normal((D, D)).astype(np.float32) * 0.05
+          for _ in range(LAYERS)]
+
+    def mlp(x):
+        for w in ws:
+            x = np.maximum(x @ w, 0.0)
+        return x
+    return mlp
+
+
+def _throughput(batch: int, mlp) -> float:
+    pipe = parse_pipeline(
+        "appsrc name=src ! tensor_batcher max_batch=%d ! "
+        "tensor_filter framework=python model=mlp max_batch=%d ! "
+        "tensor_unbatcher ! fakesink name=out" % (batch, batch),
+        models={"mlp": mlp})
+    pipe.start()
+    frame = np.ones((D,), np.float32)
+    t0 = time.perf_counter()
+    for _ in range(N_FRAMES):
+        pipe["src"].push(frame)
+    pipe["src"].end_of_stream()
+    assert pipe["out"].eos_seen.wait(timeout=120)
+    wall = time.perf_counter() - t0
+    assert pipe["out"].n_received == N_FRAMES
+    pipe.stop()
+    return N_FRAMES / wall
+
+
+def bench_throughput_vs_batch() -> List[str]:
+    mlp = _make_mlp()
+    mlp(np.ones((8, D), np.float32))  # warm BLAS
+    rows = []
+    rates = {}
+    for batch in (1, 2, 4, 8):
+        fps = _throughput(batch, mlp)
+        rates[batch] = fps
+        rows.append(f"e5_batch{batch},{1e6 / fps:.1f},fps={fps:.0f}"
+                    f";speedup_vs_b1=x{fps / rates[1]:.2f}")
+    speedup = rates[8] / rates[1]
+    assert speedup >= 2.0, f"batch-8 speedup only x{speedup:.2f}"
+    return rows
+
+
+def bench_bucket_recompiles() -> List[str]:
+    import jax.numpy as jnp
+
+    def jmlp(x):
+        for _ in range(4):
+            x = jnp.maximum(x @ jnp.eye(D, dtype=jnp.float32), 0.0)
+        return x
+
+    filt = TensorFilter("bucketed", fn=jmlp, framework="jax", max_batch=8)
+    rng = np.random.default_rng(3)
+    sizes = [int(rng.integers(1, 9)) for _ in range(64)]
+    for n in sorted(set(sizes)) + sizes:  # every size appears at least once
+        filt.invoke_batched([np.ones((n, D), np.float32)], n)
+    n_buckets = filt.n_bucket_compilations
+    assert n_buckets <= 4, f"{n_buckets} buckets for max_batch=8"
+    per_bucket = ";".join(
+        f"b{b}:n={int(s[1])}:{1e3 * s[2] / s[0]:.2f}ms"
+        for b, s in sorted(filt.bucket_stats.items()))
+    return [f"e5_bucket_cache,{n_buckets}.0,"
+            f"compilations_for_sizes_1..8 (max log2(8)+1=4);{per_bucket}"]
+
+
+def run() -> List[str]:
+    rows = []
+    rows += bench_throughput_vs_batch()
+    rows += bench_bucket_recompiles()
+    return rows

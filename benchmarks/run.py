@@ -14,13 +14,15 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: e1,e2,e3,e4,roofline")
+                    help="comma list: e1,e2,e3,e4,e5,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import e1_multimodel, e2_ars, e3_mtcnn, e4_overhead, roofline
+    from . import (e1_multimodel, e2_ars, e3_mtcnn, e4_overhead, e5_batching,
+                   roofline)
     sections = [("e1", e1_multimodel), ("e2", e2_ars), ("e3", e3_mtcnn),
-                ("e4", e4_overhead), ("roofline", roofline)]
+                ("e4", e4_overhead), ("e5", e5_batching),
+                ("roofline", roofline)]
     print("name,us_per_call,derived")
     failed = False
     for name, mod in sections:

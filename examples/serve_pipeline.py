@@ -1,6 +1,12 @@
-"""Serve a small LM with batched requests THROUGH a stream pipeline —
-the paper's thesis end-to-end: the serving engine is just another
-Tensor-Filter.
+"""Serve a small LM with continuously-batched requests THROUGH a stream
+pipeline — the paper's thesis end-to-end: the serving engine is just
+another Tensor-Filter.
+
+Requests stream into a ``tensor_batcher`` (flushes on a full batch OR
+after ``max_wait_ms`` — light traffic still gets bounded latency), the
+continuous-batching ServeEngine runs as a ``tensor_filter`` with a
+padded-bucket cache, and ``tensor_unbatcher`` restores one buffer per
+request with its original pts/meta.
 
     PYTHONPATH=src python examples/serve_pipeline.py
 """
@@ -22,37 +28,39 @@ BATCH = 4
 engine = ServeEngine(model, params, batch_size=BATCH, capacity=96,
                      max_new_tokens=12)
 
-# request stream -> aggregator batches them -> engine filter -> sink
-rng = np.random.default_rng(0)
-
-
-def llm_filter(prompts):
-    """prompts: (BATCH, S) int32 -> generated (BATCH, max_new)."""
-    return engine.generate_batch(np.asarray(prompts, np.int32))
-
-
+# request stream -> micro-batcher -> engine filter -> unbatch -> sink
 pipe = parse_pipeline(
-    "appsrc name=req ! tensor_aggregator frames_in=%d stack=true ! "
-    "queue max_size=4 ! tensor_filter framework=python model=llm ! "
-    "tensor_sink name=out keep=true" % BATCH,
-    models={"llm": llm_filter})
+    "appsrc name=req ! tensor_batcher max_batch=%d max_wait_ms=200 ! "
+    "queue max_size=4 ! tensor_filter name=llm framework=python model=llm "
+    "max_batch=%d ! tensor_unbatcher ! tensor_sink name=out keep=true"
+    % (BATCH, BATCH),
+    models={"llm": engine.as_pipeline_filter()})
 pipe.start()
 
-N_REQ = 12
+rng = np.random.default_rng(0)
+N_REQ = 13  # deliberately not a multiple of BATCH: EOS flushes the tail
+            # (max_wait_ms covers the no-EOS case: a trickle of requests
+            # still gets served within 200ms instead of waiting for a
+            # full batch)
 t0 = time.perf_counter()
 for i in range(N_REQ):
     prompt = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
-    pipe["req"].push(prompt)
+    pipe["req"].push(prompt, meta={"request": i})
 pipe["req"].end_of_stream()
-deadline = time.monotonic() + 120
-out = pipe["out"]
-while out.n_received < N_REQ // BATCH and time.monotonic() < deadline:
-    time.sleep(0.05)
+pipe["out"].eos_seen.wait(timeout=300)
 wall = time.perf_counter() - t0
 pipe.stop()
 
+out = pipe["out"]
 gens = [np.asarray(b.data) for b in out.buffers]
 total = sum(g.size for g in gens)
-print(f"served {N_REQ} requests ({len(gens)} batches) -> {total} tokens "
+llm = pipe["llm"]
+print(f"served {out.n_received} requests -> {total} tokens "
       f"in {wall:.2f}s ({total/wall:.1f} tok/s)")
-print("sample generation:", gens[0][0] if gens else "none")
+print(f"scheduler: prefills={engine.n_prefills} joins={engine.n_joins} "
+      f"evictions={engine.n_evictions}")
+print(f"filter buckets: { {b: s[0] for b, s in llm.bucket_stats.items()} } "
+      f"({llm.n_bucket_compilations} distinct padded shapes)")
+print("request order preserved:",
+      [b.meta.get("request") for b in out.buffers] == list(range(N_REQ)))
+print("sample generation:", gens[0] if gens else "none")

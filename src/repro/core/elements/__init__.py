@@ -6,6 +6,7 @@ from .filter import TensorFilter
 from .routing import (Tee, TensorMux, TensorDemux, TensorMerge, TensorSplit,
                       InputSelector, OutputSelector, Valve)
 from .aggregator import TensorAggregator, TensorRate
+from .batcher import TensorBatcher, TensorUnbatcher
 from .transform import TensorTransform
 from .flow import TensorIf, TensorRepoSink, TensorRepoSrc, TensorRepo
 
@@ -16,5 +17,6 @@ __all__ = [
     "Tee", "TensorMux", "TensorDemux", "TensorMerge", "TensorSplit",
     "InputSelector", "OutputSelector", "Valve",
     "TensorAggregator", "TensorRate", "TensorTransform",
+    "TensorBatcher", "TensorUnbatcher",
     "TensorIf", "TensorRepoSink", "TensorRepoSrc", "TensorRepo",
 ]

@@ -11,23 +11,42 @@ A filter is resolved either from a direct ``fn`` or from the model
 registry (``model="glm4-9b"``), which mirrors loading a .tflite/.snpe
 artifact by path.  Filters keep per-invocation latency statistics so
 benchmarks can report per-stage numbers like the paper's Table II.
+
+Micro-batching: buffers produced by ``TensorBatcher`` carry
+``meta["batch"]`` and a leading batch axis.  The filter pads such
+batches up to the next power-of-2 *bucket* so a jitted backend only
+ever sees ``log2(max_batch)+1`` distinct leading shapes — one XLA
+compilation per bucket rather than one per observed batch size.
+Outputs are sliced back to the true batch size and the batch metadata
+is forwarded untouched for the downstream ``TensorUnbatcher``.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..element import Element, Pad
 from ..stream import Buffer
+from .batcher import BATCH_META_KEY
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """Smallest power of two >= n, clamped to max_batch."""
+    if n >= max_batch:
+        return max_batch
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
 
 
 class TensorFilter(Element):
     def __init__(self, name: str, fn: Optional[Callable] = None,
                  model: Optional[str] = None, framework: str = "python",
                  device=None, mesh=None, in_shardings=None, out_shardings=None,
-                 outputs_meta_key: Optional[str] = None):
+                 outputs_meta_key: Optional[str] = None, max_batch: int = 8):
         super().__init__(name)
         self.add_sink_pad()
         self.add_src_pad()
@@ -40,9 +59,12 @@ class TensorFilter(Element):
         self._out_shardings = out_shardings
         self._compiled: Optional[Callable] = None
         self.outputs_meta_key = outputs_meta_key
+        self.max_batch = int(max_batch)
         # latency stats (paper Table II rows 3-5)
         self.n_invocations = 0
         self.total_latency_s = 0.0
+        # bucket cache stats: bucket size -> [n_batches, n_frames, total_s]
+        self.bucket_stats: Dict[int, List[float]] = {}
 
     # -- backend resolution -------------------------------------------------
     def _resolve(self) -> Callable:
@@ -94,8 +116,41 @@ class TensorFilter(Element):
             return tuple(out)
         return (out,)
 
+    def invoke_batched(self, chunks: Sequence[Any], n: int) -> Tuple[Any, ...]:
+        """Invoke on a leading-batch-axis stack of ``n`` frames.
+
+        Pads the batch axis up to the power-of-2 bucket so a jitted
+        backend compiles at most once per bucket, then slices outputs
+        back to the true size.
+        """
+        bucket = bucket_for(n, self.max_batch)
+        if bucket > n:
+            chunks = [np.concatenate(
+                [c, np.zeros((bucket - n,) + tuple(np.asarray(c).shape[1:]),
+                             np.asarray(c).dtype)], axis=0)
+                for c in chunks]
+        t0 = time.perf_counter()
+        out = self.invoke(chunks)
+        stat = self.bucket_stats.setdefault(bucket, [0, 0, 0.0])
+        stat[0] += 1
+        stat[1] += n
+        stat[2] += time.perf_counter() - t0
+        if bucket > n:
+            out = tuple(np.asarray(o)[:n] for o in out)
+        return out
+
+    @property
+    def n_bucket_compilations(self) -> int:
+        """Distinct padded leading shapes seen == jit compilations
+        attributable to batch-size variation (one per bucket)."""
+        return len(self.bucket_stats)
+
     def transform(self, pad: Pad, buf: Buffer) -> Optional[Buffer]:
-        out_chunks = self.invoke(buf.chunks)
+        info = buf.meta.get(BATCH_META_KEY)
+        if info is not None:
+            out_chunks = self.invoke_batched(buf.chunks, int(info["size"]))
+        else:
+            out_chunks = self.invoke(buf.chunks)
         new = buf.with_chunks(out_chunks)
         if self.outputs_meta_key:
             new.meta[self.outputs_meta_key] = out_chunks

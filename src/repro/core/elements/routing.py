@@ -71,15 +71,25 @@ class _SyncedNToOne(Element):
         idx = self._indices[pad.name]
         if buf.eos:
             self.collector.offer(idx, buf)
-            with self._eos_lock:
-                if self.collector.all_eos() and not self._eos_sent:
-                    self._eos_sent = True
-                    self.srcpad.push(Buffer.eos_buffer())
+            self._maybe_eos()
             return
         ready = self.collector.offer(idx, buf)
         if ready is not None:
             out = self.combine(ready)
             self.srcpad.push(out)
+        # a collection may have drained the queue of an already-ended pad
+        self._maybe_eos()
+
+    def _maybe_eos(self) -> None:
+        """Forward EOS as soon as no further output is possible — e.g.
+        the base pad ended under ``base:<idx>`` sync, even if other
+        pads are still live."""
+        with self._eos_lock:
+            if self._eos_sent:
+                return
+            if self.collector.all_eos() or self.collector.exhausted():
+                self._eos_sent = True
+                self.srcpad.push(Buffer.eos_buffer())
 
 
 class TensorMux(_SyncedNToOne):

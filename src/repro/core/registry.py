@@ -58,7 +58,12 @@ def _register_builtins() -> None:
         name, mode=p.get("mode", "argmax_label"),
         width=int(p.get("width", 0)), height=int(p.get("height", 0))))
     register_element("tensor_filter", lambda name, **p: E.TensorFilter(
-        name, model=p.get("model"), framework=p.get("framework", "python")))
+        name, model=p.get("model"), framework=p.get("framework", "python"),
+        max_batch=int(p.get("max_batch", 8))))
+    register_element("tensor_batcher", lambda name, **p: E.TensorBatcher(
+        name, max_batch=int(p.get("max_batch", 8)),
+        max_wait_ms=float(p["max_wait_ms"]) if "max_wait_ms" in p else None))
+    register_element("tensor_unbatcher", lambda name, **p: E.TensorUnbatcher(name))
     register_element("tee", lambda name, **p: E.Tee(
         name, num_src_pads=int(p.get("num_src_pads", 0))))
     register_element("tensor_mux", lambda name, **p: E.TensorMux(

@@ -68,6 +68,28 @@ class SyncCollector:
         with self.lock:
             return all(self.eos)
 
+    def exhausted(self) -> bool:
+        """True when no future ``offer`` can ever complete a frame set,
+        so the owning element may forward EOS early.
+
+          * BASE    — the base pad ended and its queue drained; other
+                      pads alone can never trigger an emission.
+          * SLOWEST — any pad ended with an empty queue (every set needs
+                      one frame from every pad).
+          * FASTEST — a pad that ended without ever producing can never
+                      supply a latest frame to duplicate; otherwise only
+                      when every pad ended.
+        """
+        with self.lock:
+            if self.policy == SyncPolicy.BASE:
+                return (self.eos[self.base_index]
+                        and not self.queues[self.base_index])
+            if self.policy == SyncPolicy.SLOWEST:
+                return any(e and not q for e, q in zip(self.eos, self.queues))
+            return all(self.eos) or any(
+                e and latest is None
+                for e, latest in zip(self.eos, self.latest))
+
     # -- policy engines ----------------------------------------------------
     def _try_collect(self) -> Optional[List[Buffer]]:
         if self.policy == SyncPolicy.SLOWEST:

@@ -1,7 +1,14 @@
-"""Serving launcher: batched generation through the ServeEngine.
+"""Serving launcher: continuous batching through the stream pipeline.
+
+Requests are pushed into an appsrc, micro-batched by ``tensor_batcher``
+(rate-adaptive: full batch or ``max_wait_ms``, whichever first), run
+through the continuous-batching ServeEngine mounted as a
+``tensor_filter``, and split back into per-request results by
+``tensor_unbatcher``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
         --requests 8 --batch 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --smoke --direct  # no pipeline
 """
 from __future__ import annotations
 
@@ -24,6 +31,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--direct", action="store_true",
+                    help="call engine.serve() directly instead of the pipeline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -35,19 +45,54 @@ def main():
                          capacity=args.prompt_len + args.max_new + 8,
                          max_new_tokens=args.max_new)
 
+    if args.requests < 1:
+        raise SystemExit("--requests must be >= 1")
     rng = np.random.default_rng(0)
-    requests = [rng.integers(0, cfg.vocab_size,
-                             rng.integers(4, args.prompt_len)).astype(np.int32)
-                for _ in range(args.requests)]
+    lengths = [int(rng.integers(4, args.prompt_len)) for _ in range(args.requests)]
+    requests = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                for n in lengths]
+
     t0 = time.perf_counter()
-    results = engine.serve(requests)
+    if args.direct:
+        results = engine.serve(requests)
+        total_tokens = sum(len(r.tokens) for r in results)
+        n_results = len(results)
+    else:
+        from ..core import parse_pipeline
+        pipe = parse_pipeline(
+            "appsrc name=req ! tensor_batcher max_batch=%d max_wait_ms=%s ! "
+            "queue max_size=8 ! tensor_filter framework=python model=llm "
+            "max_batch=%d ! tensor_unbatcher ! tensor_sink name=out keep=true"
+            % (args.batch, args.max_wait_ms, args.batch),
+            models={"llm": engine.as_pipeline_filter()})
+        pipe.start()
+        # batcher stacks frames, so pad prompts to a common length up front
+        # (left-pad: the engine already treats leading zeros as padding)
+        maxlen = max(lengths)
+        for i, r in enumerate(requests):
+            pipe["req"].push(np.pad(r, (maxlen - len(r), 0)),
+                             meta={"request": i, "prompt_len": len(r)})
+        pipe["req"].end_of_stream()
+        pipe["out"].eos_seen.wait(timeout=300)
+        pipe.stop()
+        results = pipe["out"].buffers
+        total_tokens = sum(np.asarray(b.data).size for b in results)
+        n_results = len(results)
     wall = time.perf_counter() - t0
-    total_tokens = sum(len(r.tokens) for r in results)
-    print(f"served {len(results)} requests / {total_tokens} tokens "
+
+    print(f"served {n_results} requests / {total_tokens} tokens "
           f"in {wall:.2f}s ({total_tokens / wall:.1f} tok/s)")
-    for r in results[:3]:
-        print(f"  req {r.request_id}: prompt[{len(r.prompt)}] -> "
-              f"{r.tokens[:8]}... latency={r.latency_s:.3f}s")
+    print(f"scheduler: prefills={engine.n_prefills} joins={engine.n_joins} "
+          f"evictions={engine.n_evictions}")
+    if args.direct:
+        for r in results[:3]:
+            print(f"  req {r.request_id}: prompt[{len(r.prompt)}] -> "
+                  f"{r.tokens[:8]}... latency={r.latency_s:.3f}s")
+    else:
+        for b in results[:3]:
+            print(f"  req {b.meta.get('request')}: "
+                  f"prompt_len={b.meta.get('prompt_len')} -> "
+                  f"{np.asarray(b.data)[:8]}...")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,35 @@
-"""Batched serving engine — the paper's "serve a model with batched
-requests" scenario, built on the stream framework.
+"""Continuous-batching serving engine built on the stream framework.
 
-Requests arrive on a queue; the engine groups them into fixed-size
-batches (padding with idle slots), runs prefill once per batch, then a
-decode loop.  The engine is itself usable as a pipeline TensorFilter
-(requests stream in, generations stream out).
+Requests enter a thread-safe queue (``submit``) and are scheduled into a
+fixed array of ``batch_size`` *slots*.  Unlike the fixed-group batcher
+this replaces, the decode loop never waits for a full group:
+
+  * finished sequences (hit ``eos_id`` or ``max_new_tokens``) are
+    *evicted*, freeing their slot immediately;
+  * queued requests *join mid-decode*: the newcomer's prompt is
+    left-padded to the batch's current position, prefilled, and its
+    slice of the KV cache is spliced into the live cache, so decoding
+    of in-flight sequences is never interrupted.
+
+All slots share one scalar decode position (sequences are left-aligned
+by padding, like the fixed-group engine before it), so a prompt longer
+than the current position waits until the position catches up — or
+until the batch drains, at which point the engine re-anchors with a
+fresh prefill.
+
+The cache splice is model-agnostic: the batch axis of every cache leaf
+is discovered once via ``jax.eval_shape`` (comparing cache shapes for
+batch B vs B+1), so any model exposing ``prefill``/``decode_step``
+works — transformer, MLA, hybrid — without per-model axis annotations.
+
+The engine is also usable as a pipeline TensorFilter
+(``as_pipeline_filter``): batched prompt tensors stream in, generated
+token tensors stream out, in request order.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import queue as _queue
 import threading
 import time
 from typing import Any, Dict, List, Optional
@@ -29,6 +49,26 @@ class GenerationResult:
     latency_s: float
 
 
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    t_submit: float
+
+
+class _Slot:
+    __slots__ = ("rid", "prompt", "tokens", "t_submit", "done")
+
+    def __init__(self, req: _Request, first_token: int, eos_id: Optional[int],
+                 max_new: int):
+        self.rid = req.rid
+        self.prompt = req.prompt
+        self.tokens: List[int] = [int(first_token)]
+        self.t_submit = req.t_submit
+        self.done = (eos_id is not None and int(first_token) == eos_id) \
+            or max_new <= 1
+
+
 class ServeEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
                  capacity: int = 256, max_new_tokens: int = 16,
@@ -43,10 +83,23 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(model, capacity, cache_dtype),
                                 static_argnames=())
         self._decode = jax.jit(make_decode_step(model, greedy=greedy))
-        self.n_batches = 0
+        # request queue + in-flight slot map
+        self._pending: collections.deque = collections.deque()
+        self._slots: List[Optional[_Slot]] = [None] * batch_size
+        self._cache = None
+        self._token = None            # (B, 1) int32 — last token per slot
+        self._pos = 0                 # shared aligned decode position
+        self._batch_axes = None       # cache pytree of batch-axis indices
+        self._lock = threading.Lock()
+        self._next_rid = 0
+        # scheduler counters
+        self.n_batches = 0            # prefill launches (back-compat alias)
         self.n_requests = 0
+        self.n_prefills = 0
+        self.n_joins = 0              # requests admitted mid-decode
+        self.n_evictions = 0          # slots freed by eos/max_new
 
-    # -- synchronous batch API ---------------------------------------------------
+    # -- synchronous fixed batch API (kept for benchmarks/back-compat) ------
     def generate_batch(self, prompts: np.ndarray,
                        extra_embeds=None) -> np.ndarray:
         """prompts: (B, S) int32 -> generated (B, max_new_tokens)."""
@@ -68,21 +121,188 @@ class ServeEngine:
         self.last_batch_latency_s = time.perf_counter() - t0
         return np.concatenate(out, axis=1)
 
-    # -- queued request API --------------------------------------------------------
+    # -- continuous batching ------------------------------------------------
+    def submit(self, prompt: np.ndarray) -> int:
+        """Enqueue a request; returns its request id (thread-safe)."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            raise ValueError(f"prompt must be non-empty 1-D, got {prompt.shape}")
+        if prompt.shape[0] > self.capacity:
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} exceeds KV-cache capacity "
+                f"{self.capacity}; raise capacity= or truncate the prompt")
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._pending.append(_Request(rid, prompt, time.monotonic()))
+            self.n_requests += 1
+        return rid
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    @property
+    def has_work(self) -> bool:
+        with self._lock:
+            return bool(self._pending) or self.n_active > 0
+
+    def step(self) -> List[GenerationResult]:
+        """Admit what fits, run one decode step, evict what finished.
+
+        Returns results for requests that completed during this step.
+        """
+        self._admit()
+        finished = self._evict()
+        if self.n_active == 0:
+            return finished
+        if self._pos >= self.capacity:
+            # cache exhausted: truncate everything still in flight
+            for slot in self._slots:
+                if slot is not None:
+                    slot.done = True
+            return finished + self._evict()
+        token, _, cache = self._decode(self.params, self._cache, self._token,
+                                       jnp.int32(self._pos))
+        self._token, self._cache = token, cache
+        self._pos += 1
+        tok = np.asarray(token[:, 0])
+        for i, slot in enumerate(self._slots):
+            if slot is None or slot.done:
+                continue
+            slot.tokens.append(int(tok[i]))
+            if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
+                    or len(slot.tokens) >= self.max_new_tokens):
+                slot.done = True
+        return finished + self._evict()
+
     def serve(self, requests: List[np.ndarray],
               timeout_s: float = 120.0) -> List[GenerationResult]:
-        """Pad/group variable requests into batches and run them all."""
-        results: List[GenerationResult] = []
-        maxlen = max(r.shape[0] for r in requests)
-        for i in range(0, len(requests), self.batch_size):
-            group = requests[i: i + self.batch_size]
-            while len(group) < self.batch_size:
-                group.append(np.zeros((maxlen,), np.int32))  # idle slot
-            batch = np.stack([np.pad(r, (maxlen - r.shape[0], 0)) for r in group])
-            t0 = time.perf_counter()
-            gen = self.generate_batch(batch.astype(np.int32))
-            dt = time.perf_counter() - t0
-            for j, r in enumerate(requests[i: i + self.batch_size]):
-                results.append(GenerationResult(
-                    request_id=i + j, prompt=r, tokens=gen[j], latency_s=dt))
-        return results
+        """Serve via continuous batching; results in request order."""
+        rids = [self.submit(r) for r in requests]
+        deadline = time.monotonic() + timeout_s
+        done: Dict[int, GenerationResult] = {}
+        while self.has_work:
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"serve: {len(done)}/{self.n_requests} finished before "
+                    f"timeout ({self.n_active} in flight)")
+            for res in self.step():
+                done[res.request_id] = res
+        return [done[rid] for rid in rids if rid in done]
+
+    def as_pipeline_filter(self):
+        """Adapter: (n, S) prompt batch -> (n, max_new_tokens) generations.
+
+        Row order in == row order out, so TensorUnbatcher downstream can
+        restore per-request pts/meta.  Rows shorter than max_new (early
+        eos) are right-padded with eos_id (or 0).
+        """
+        pad = self.eos_id if self.eos_id is not None else 0
+
+        def fn(prompts):
+            prompts = np.asarray(prompts, np.int32)
+            results = self.serve([row for row in prompts])
+            out = np.full((len(results), self.max_new_tokens), pad, np.int32)
+            for i, r in enumerate(results):
+                out[i, : len(r.tokens)] = r.tokens
+            return out
+        return fn
+
+    # -- scheduler internals ------------------------------------------------
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        if not free:
+            return
+        with self._lock:
+            if not self._pending:
+                return
+            if self.n_active == 0:
+                # batch drained: re-anchor with a fresh prefill wave
+                self._cache = None
+                take = [self._pending.popleft()
+                        for _ in range(min(len(free), len(self._pending)))]
+                joins = list(zip(free, take))
+                fresh = True
+            elif self._pos >= self.capacity:
+                # cache exhausted: in-flight slots are about to be
+                # truncated; hold newcomers for the fresh re-anchor
+                return
+            else:
+                # mid-decode join: only prompts that fit the current position
+                joins, keep = [], collections.deque()
+                for req in self._pending:
+                    if len(joins) < len(free) and req.prompt.shape[0] <= self._pos:
+                        joins.append((free[len(joins)], req))
+                    else:
+                        keep.append(req)
+                self._pending = keep
+                fresh = False
+        if not joins:
+            return
+        B = self.batch_size
+        if fresh:
+            maxlen = max(req.prompt.shape[0] for _, req in joins)
+            self._pos = maxlen
+        batch = np.zeros((B, self._pos), np.int32)
+        for slot_i, req in joins:
+            batch[slot_i, self._pos - req.prompt.shape[0]:] = req.prompt
+        logits, cache = self._prefill(self.params, jnp.asarray(batch), None)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        self.n_prefills += 1
+        self.n_batches += 1
+        if fresh:
+            self._cache, self._token = cache, first
+        else:
+            slot_ids = [slot_i for slot_i, _ in joins]
+            self._cache = self._splice_cache(self._cache, cache, slot_ids)
+            self._token = self._token.at[jnp.asarray(slot_ids), 0].set(
+                first[jnp.asarray(slot_ids), 0])
+            self.n_joins += len(joins)
+        first_np = np.asarray(first[:, 0])
+        for slot_i, req in joins:
+            self._slots[slot_i] = _Slot(req, first_np[slot_i], self.eos_id,
+                                        self.max_new_tokens)
+
+    def _evict(self) -> List[GenerationResult]:
+        out: List[GenerationResult] = []
+        now = time.monotonic()
+        for i, slot in enumerate(self._slots):
+            if slot is None or not slot.done:
+                continue
+            out.append(GenerationResult(
+                request_id=slot.rid, prompt=slot.prompt,
+                tokens=np.asarray(slot.tokens, np.int32),
+                latency_s=now - slot.t_submit))
+            self._slots[i] = None
+            self.n_evictions += 1
+        return out
+
+    # -- cache splicing -----------------------------------------------------
+    def _discover_batch_axes(self, seq_len: int):
+        """Which axis of each cache leaf is the batch axis?  Compare
+        cache shapes for batch B vs B+1 (eval_shape: no compilation)."""
+        def shapes(batch):
+            tokens = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+            return jax.eval_shape(self._prefill, self.params, tokens, None)[1]
+
+        def axis(a, b):
+            for i, (p, q) in enumerate(zip(a.shape, b.shape)):
+                if p != q:
+                    return i
+            return -1  # leaf independent of batch
+        return jax.tree.map(axis, shapes(self.batch_size),
+                            shapes(self.batch_size + 1))
+
+    def _splice_cache(self, live, fresh, slot_ids: List[int]):
+        if self._batch_axes is None:
+            self._batch_axes = self._discover_batch_axes(max(self._pos, 1))
+        sel = jnp.asarray(slot_ids, jnp.int32)
+
+        def merge(old, new, ax):
+            if ax < 0:
+                return old
+            idx = [slice(None)] * old.ndim
+            idx[ax] = sel
+            return old.at[tuple(idx)].set(new[tuple(idx)])
+        return jax.tree.map(merge, live, fresh, self._batch_axes)

@@ -1,0 +1,132 @@
+"""Micro-batching subsystem: TensorBatcher/TensorUnbatcher + the
+TensorFilter bucket cache."""
+import time
+
+import numpy as np
+
+from repro.core import Buffer, parse_pipeline
+from repro.core.elements.batcher import (BATCH_META_KEY, TensorBatcher,
+                                         TensorUnbatcher)
+from repro.core.elements.filter import TensorFilter, bucket_for
+from repro.core.elements.sinks import TensorSink
+
+
+def _frame(v, pts, **meta):
+    return Buffer(np.full((3,), v, np.float32), pts=pts, meta=meta)
+
+
+def _wire(batcher):
+    sink = TensorSink("s", keep=True)
+    batcher.link(sink)
+    return sink
+
+
+def test_batcher_full_batch_flush():
+    b = TensorBatcher("b", max_batch=4)
+    sink = _wire(b)
+    for i in range(9):
+        b.chain(b.sinkpad, _frame(i, float(i)))
+    assert sink.n_received == 2  # two full batches, one frame pending
+    first = sink.buffers[0]
+    assert first.data.shape == (4, 3)
+    info = first.meta[BATCH_META_KEY]
+    assert info["size"] == 4 and info["pts"] == [0.0, 1.0, 2.0, 3.0]
+    assert first.pts == 3.0  # latest input stamps the batch (paper §III)
+
+
+def test_batcher_flush_on_eos():
+    b = TensorBatcher("b", max_batch=8)
+    sink = _wire(b)
+    for i in range(3):
+        b.chain(b.sinkpad, _frame(i, float(i)))
+    assert sink.n_received == 0  # partial batch held
+    b.chain(b.sinkpad, Buffer.eos_buffer())
+    assert sink.n_received == 1  # partial batch flushed before EOS
+    assert sink.eos_seen.is_set()
+    assert sink.buffers[0].data.shape == (3, 3)
+    assert b.n_eos_flushes == 1
+
+
+def test_batcher_max_wait_timeout_flush():
+    b = TensorBatcher("b", max_batch=64, max_wait_ms=40)
+    sink = _wire(b)
+    b.start()
+    try:
+        b.chain(b.sinkpad, _frame(1, 0.0))
+        b.chain(b.sinkpad, _frame(2, 1.0))
+        deadline = time.monotonic() + 2.0
+        while sink.n_received == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        b.stop()
+    assert sink.n_received == 1  # flushed by timeout, far below max_batch
+    assert sink.buffers[0].data.shape == (2, 3)
+    assert b.n_timeout_flushes == 1
+
+
+def test_unbatcher_zero_copy_views():
+    b = TensorBatcher("b", max_batch=2)
+    ub = TensorUnbatcher("u")
+    sink = TensorSink("s", keep=True)
+    b.link(ub).link(sink)
+    b.chain(b.sinkpad, _frame(1, 0.5, request=0))
+    b.chain(b.sinkpad, _frame(2, 1.5, request=1))
+    assert sink.n_received == 2
+    # unbatch slices are views into the batched array, never copies
+    batched = np.stack([np.full((3,), v, np.float32) for v in (1, 2)])
+    ub2 = TensorUnbatcher("u2")
+    s2 = TensorSink("s2", keep=True)
+    ub2.link(s2)
+    ub2.chain(ub2.sinkpad, Buffer(batched))
+    for j, out in enumerate(s2.buffers):
+        assert np.shares_memory(np.asarray(out.data), batched)
+
+
+def test_pts_meta_roundtrip_through_batch_filter_unbatch():
+    pipe = parse_pipeline(
+        "appsrc name=src ! tensor_batcher max_batch=4 ! "
+        "tensor_filter framework=python model=double max_batch=4 ! "
+        "tensor_unbatcher ! tensor_sink name=out keep=true",
+        models={"double": lambda x: np.asarray(x) * 2.0})
+    pipe.start()
+    for i in range(8):
+        pipe["src"].push(np.full((3,), i, np.float32), pts=10.0 + i,
+                         meta={"request": i})
+    pipe["src"].end_of_stream()
+    assert pipe["out"].eos_seen.wait(timeout=10)
+    pipe.stop()
+    bufs = pipe["out"].buffers
+    assert len(bufs) == 8
+    for i, buf in enumerate(bufs):
+        assert buf.pts == 10.0 + i                       # per-frame pts restored
+        assert buf.meta["request"] == i                  # per-frame meta restored
+        np.testing.assert_allclose(np.asarray(buf.data), np.full((3,), 2.0 * i))
+
+
+def test_bucket_for():
+    assert [bucket_for(n, 8) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8]
+
+
+def test_bucket_cache_bounds_recompiles():
+    """Varying batch sizes must hit at most log2(max_batch)+1 buckets."""
+    f = TensorFilter("f", fn=lambda x: x * 2, framework="jax", max_batch=8)
+    for n in (1, 2, 3, 4, 5, 6, 7, 8, 3, 5, 1):
+        out = f.invoke_batched([np.ones((n, 4), np.float32)], n)
+        assert np.asarray(out[0]).shape == (n, 4)  # sliced back to true size
+    assert set(f.bucket_stats) == {1, 2, 4, 8}
+    assert f.n_bucket_compilations <= 4  # log2(8)+1
+    # per-bucket stats account for every frame
+    assert sum(s[1] for s in f.bucket_stats.values()) == 1+2+3+4+5+6+7+8+3+5+1
+
+
+def test_batcher_rejects_arity_change():
+    b = TensorBatcher("b", max_batch=4)
+    _wire(b)
+    b.chain(b.sinkpad, Buffer((np.zeros(2), np.zeros(3))))
+    try:
+        b.chain(b.sinkpad, Buffer(np.zeros(2)))
+    except ValueError as e:
+        assert "arity" in str(e)
+    else:
+        raise AssertionError("expected ValueError on chunk arity change")

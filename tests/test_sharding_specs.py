@@ -100,7 +100,10 @@ step = make_train_step(model)
 with mesh:
     lowered = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(state_s, batch)
     compiled = lowered.compile()
-print("COMPILED_OK", compiled.cost_analysis().get("flops", 0) > 0)
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):  # older jax returns one dict per device
+    ca = ca[0]
+print("COMPILED_OK", ca.get("flops", 0) > 0)
 """
 
 

@@ -63,3 +63,87 @@ def test_eos_tracking():
     assert not c.all_eos()
     c.offer(1, Buffer.eos_buffer())
     assert c.all_eos()
+
+
+def test_base_pad_eos_exhausts_collector():
+    """EOS on the base pad under base:<idx>: nothing can emit anymore,
+    even though the other pad is still live."""
+    c = SyncCollector(2, policy=SyncPolicy.BASE, base_index=1)
+    c.offer(0, _buf(1, 0.0))
+    assert not c.exhausted()
+    c.offer(1, Buffer.eos_buffer())
+    assert c.exhausted()          # base gone -> no future frame sets
+    assert not c.all_eos()        # pad 0 still live
+    assert c.offer(0, _buf(2, 0.1)) is None  # live pad alone can't emit
+
+
+def test_base_pad_eos_drains_queue_before_exhaustion():
+    """Base frames queued before EOS still pair up; exhaustion only
+    once the base queue drains."""
+    c = SyncCollector(2, policy=SyncPolicy.BASE, base_index=0)
+    # pad 1 silent, so base frames queue up instead of emitting
+    c.offer(0, _buf(1, 0.0))
+    c.offer(0, _buf(2, 0.1))
+    c.offer(0, Buffer.eos_buffer())
+    assert not c.exhausted()      # base frames still queued
+    r = c.offer(1, _buf(8, 0.05))
+    assert r is not None and r[0].data[0] in (1, 2)
+    while not c.exhausted():
+        r = c.offer(1, _buf(9, 0.2))
+        assert r is not None      # queued base frames keep pairing up
+    assert c.exhausted() and not c.all_eos()
+
+
+def test_base_eos_forwards_eos_downstream_early():
+    """A mux locked to a base pad must forward EOS as soon as the base
+    ends — not wait for the other (possibly infinite) source."""
+    from repro.core.elements.routing import TensorMux
+    from repro.core.elements.sinks import TensorSink
+    mux = TensorMux("m", num_sinks=2, sync="base:0")
+    sink = TensorSink("s", keep=True)
+    mux.link(sink)
+    mux.chain(mux.sinkpads["sink_1"], _buf(9, 0.0))
+    mux.chain(mux.sinkpads["sink_0"], _buf(1, 0.0))
+    assert sink.n_received == 1
+    mux.chain(mux.sinkpads["sink_0"], Buffer.eos_buffer())
+    assert sink.eos_seen.is_set()  # other pad never sent EOS
+    # stray frames after base EOS are dropped, not emitted
+    mux.chain(mux.sinkpads["sink_1"], _buf(10, 0.1))
+    assert sink.n_received == 1
+
+
+def test_fastest_silent_source_gates_until_first_frame():
+    """fastest: a source that has produced nothing (and not ended) gates
+    emission — there is no latest frame to duplicate yet."""
+    c = SyncCollector(2, policy=SyncPolicy.FASTEST)
+    for i in range(4):
+        assert c.offer(0, _buf(i, i * 0.1)) is None
+    assert not c.exhausted()
+    # first (and only) frame from the slow source unblocks everything
+    r = c.offer(1, _buf(42, 0.4))
+    assert r is not None
+
+
+def test_fastest_duplicates_latest_after_source_eos():
+    """fastest: a source that produced once then ended keeps being
+    duplicated from its latest frame (duplicate-latest path)."""
+    c = SyncCollector(2, policy=SyncPolicy.FASTEST)
+    c.offer(1, _buf(42, 0.0))
+    c.offer(0, _buf(0, 0.0))      # first emission consumes both queues
+    c.offer(1, Buffer.eos_buffer())
+    assert not c.exhausted()      # latest frame remains available
+    for i in range(1, 4):
+        r = c.offer(0, _buf(i, i * 0.1))
+        assert r is not None
+        assert r[1].data[0] == 42  # ended source's latest is duplicated
+        assert r[0].data[0] == i
+
+
+def test_fastest_source_eos_without_frames_exhausts():
+    """fastest: a source that ends having produced nothing can never be
+    duplicated -> the collector is exhausted."""
+    c = SyncCollector(2, policy=SyncPolicy.FASTEST)
+    c.offer(0, _buf(0, 0.0))
+    c.offer(1, Buffer.eos_buffer())
+    assert c.exhausted()
+    assert c.offer(0, _buf(1, 0.1)) is None
