@@ -54,6 +54,93 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                        jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale, block_size,
+                         n_pages):
+    """Same online-softmax body as ``_decode_kernel``, but the KV block
+    streamed at grid step (b, h, ip) is *indirected*: the BlockSpec
+    index map reads ``pt_ref[b, ip]`` (scalar-prefetched page table) to
+    pick the physical block, so the kernel walks each sequence's pages
+    in logical order while the pool stays scattered in HBM.  Per-row
+    lengths replace the shared scalar length."""
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bs)
+    kpos = ip * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[b], s, NEG)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    m_ref[0, 0] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bs, hd)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           interpret: bool = True):
+    """q: (B,H,hd); pools: (num_blocks,KV,bs,hd); page_table: (B,P)
+    int32; lengths: (B,) int32 -> (B,H,hd).
+
+    Flash-decoding split-K over *pages*: grid (B, H, P), one KV block
+    per page.  Unallocated page-table entries may point anywhere valid —
+    their positions exceed ``lengths`` so the mask zeroes them.
+    """
+    B, H, hd = q.shape
+    KV, bs = k_pages.shape[1], k_pages.shape[2]
+    P = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, block_size=bs,
+                          n_pages=P),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, H, P),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda b, h, ip, ln, pt: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd),
+                             lambda b, h, ip, ln, pt: (pt[b, ip], h // G, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd),
+                             lambda b, h, ip, ln, pt: (pt[b, ip], h // G, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd),
+                                   lambda b, h, ip, ln, pt: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table, q[:, :, None, :], k_pages, v_pages)
+    return out[:, :, 0, :]
+
+
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 512,
                      interpret: bool = True):

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import decode_attention
+from .kernel import decode_attention, paged_decode_attention
 
 
 def decode_attention_bhd(q, k_cache, v_cache, length, *, block_k: int = 512,
@@ -20,4 +20,19 @@ def decode_attention_bhd(q, k_cache, v_cache, length, *, block_k: int = 512,
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
     o = decode_attention(q[:, 0], kt, vt, length, block_k=bk,
                          interpret=interpret)
+    return o[:, None]
+
+
+def paged_decode_attention_bhd(q, k_pages, v_pages, page_table, lengths, *,
+                               interpret: bool = True):
+    """Paged decode attention in the serving engine's layout.
+
+    q: (B,1,H,hd); k_pages/v_pages: (num_blocks, block_size, KV, hd) —
+    the ``ServeEngine`` paged-cache leaf layout; page_table: (B,P);
+    lengths: (B,).  Returns (B,1,H,hd).
+    """
+    kt = jnp.moveaxis(k_pages, 2, 1)   # -> (nb, KV, bs, hd)
+    vt = jnp.moveaxis(v_pages, 2, 1)
+    o = paged_decode_attention(q[:, 0], kt, vt, page_table, lengths,
+                               interpret=interpret)
     return o[:, None]

@@ -7,7 +7,8 @@ import numpy as np
 
 
 def decode_attention_ref(q, k_cache, v_cache, length):
-    """q: (B,H,hd); caches: (B,KV,C,hd); length: scalar valid prefix.
+    """q: (B,H,hd); caches: (B,KV,C,hd); length: scalar valid prefix,
+    or (B,) per-sequence valid prefixes.
 
     Returns (B,H,hd).
     """
@@ -17,8 +18,31 @@ def decode_attention_ref(q, k_cache, v_cache, length):
     qg = q.reshape(B, KV, G, hd)
     s = jnp.einsum("bkgd,bktd->bkgt", qg, k_cache).astype(jnp.float32)
     s = s / np.sqrt(hd)
-    valid = jnp.arange(C)[None, None, None, :] < length
+    length = jnp.asarray(length)
+    if length.ndim == 1:  # (B,) true per-sequence lengths (paged decode)
+        valid = jnp.arange(C)[None, None, None, :] < length[:, None, None, None]
+    else:
+        valid = jnp.arange(C)[None, None, None, :] < length
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     o = jnp.einsum("bkgt,bktd->bkgd", p, v_cache)
     return o.reshape(B, H, hd)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Oracle: decode attention through a block page table.
+
+    q: (B,H,hd); k_pages/v_pages: (num_blocks, KV, bs, hd) shared pools;
+    page_table: (B,P) int32 — physical block of each logical page;
+    lengths: (B,) valid tokens per sequence.  Gathers each sequence's
+    logical view (B, KV, P*bs, hd) then reduces exactly like the dense
+    oracle, so dense and paged layouts are interchangeable under
+    identical content.  Returns (B,H,hd).
+    """
+    B, P = page_table.shape
+    KV, bs, hd = k_pages.shape[1:]
+    kg = jnp.moveaxis(k_pages[page_table], 2, 1)   # (B,KV,P,bs,hd)
+    vg = jnp.moveaxis(v_pages[page_table], 2, 1)
+    kg = kg.reshape(B, KV, P * bs, hd)
+    vg = vg.reshape(B, KV, P * bs, hd)
+    return decode_attention_ref(q, kg, vg, lengths)

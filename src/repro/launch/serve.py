@@ -34,6 +34,16 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=50.0)
     ap.add_argument("--direct", action="store_true",
                     help="call engine.serve() directly instead of the pipeline")
+    ap.add_argument("--paged", choices=["auto", "on", "off"], default="auto",
+                    help="block-paged KV cache (auto: on when the model "
+                         "supports it)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged mode: tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged mode: pool size (default: batch*capacity "
+                         "worth of blocks)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="paged mode: prompt tokens cached per join step")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -43,7 +53,11 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, batch_size=args.batch,
                          capacity=args.prompt_len + args.max_new + 8,
-                         max_new_tokens=args.max_new)
+                         max_new_tokens=args.max_new,
+                         paged={"auto": None, "on": True, "off": False}[args.paged],
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         prefill_chunk=args.prefill_chunk)
 
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1")
@@ -83,7 +97,13 @@ def main():
     print(f"served {n_results} requests / {total_tokens} tokens "
           f"in {wall:.2f}s ({total_tokens / wall:.1f} tok/s)")
     print(f"scheduler: prefills={engine.n_prefills} joins={engine.n_joins} "
-          f"evictions={engine.n_evictions}")
+          f"evictions={engine.n_evictions}"
+          + (f" prefill_chunks={engine.n_prefill_chunks}" if engine.paged
+             else ""))
+    if engine.paged:
+        a = engine.allocator
+        print(f"paged cache: {a.num_blocks} blocks x {a.block_size} tokens, "
+              f"{a.n_free} free after drain")
     if args.direct:
         for r in results[:3]:
             print(f"  req {r.request_id}: prompt[{len(r.prompt)}] -> "

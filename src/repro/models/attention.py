@@ -271,6 +271,91 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
     return _grouped_out(probs, v_cache)
 
 
+def paged_gather(storage, page_table):
+    """Materialize per-slot logical views of a shared block pool.
+
+    storage: (num_blocks, block_size, ...); page_table: (B, P) int32.
+    Returns (B, P * block_size, ...) — row ``b`` holds slot ``b``'s
+    logical positions 0..P*bs-1 in order.  Entries past the slot's true
+    length are whatever the pointed-to blocks hold; callers mask by
+    length.
+    """
+    B, P = page_table.shape
+    g = storage[page_table]                       # (B, P, bs, ...)
+    return g.reshape((B, P * storage.shape[1]) + storage.shape[2:])
+
+
+def paged_scatter(storage, vals, page_table, lengths, t_valid):
+    """Write per-slot token runs into the shared block pool.
+
+    storage: (num_blocks, block_size, ...); vals: (B, T, ...).
+    Token ``t`` of row ``b`` lands at logical position ``lengths[b] + t``
+    iff ``t < t_valid[b]``; invalid tokens (padding, inactive slots,
+    positions past the page table) are dropped, not written.
+    """
+    nb, bs = storage.shape[:2]
+    B, T = vals.shape[:2]
+    P = page_table.shape[1]
+    pos = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]   # (B,T)
+    page = pos // bs
+    block = jnp.take_along_axis(page_table, jnp.clip(page, 0, P - 1), axis=1)
+    ok = (jnp.arange(T)[None, :] < t_valid[:, None]) & (page < P)
+    flat_idx = jnp.where(ok, block * bs + pos % bs, nb * bs)  # OOB -> drop
+    flat = storage.reshape((nb * bs,) + storage.shape[2:])
+    flat = flat.at[flat_idx.reshape(-1)].set(
+        vals.astype(storage.dtype).reshape((B * T,) + vals.shape[2:]),
+        mode="drop")
+    return flat.reshape(storage.shape)
+
+
+def paged_attention(q, k_gath, v_gath, positions, *,
+                    scale: Optional[float] = None):
+    """Per-slot attention over page-table-gathered caches.
+
+    q: (B,T,H,hd) — T query tokens per slot; k_gath/v_gath: (B,C,KV,hd)
+    logical views from ``paged_gather``; positions: (B,T) each query's
+    absolute position in its own sequence.  Query t of slot b attends
+    to logical slots l <= positions[b, t] — per-slot causal masking with
+    true lengths, no shared-position left padding.  For T=1 this is the
+    same einsum/mask/softmax chain as ``decode_attention``, so paged
+    and dense decode agree bit-for-bit on identical cache content.
+    """
+    hd = q.shape[-1]
+    C = k_gath.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    scores = _grouped_scores(q * scale, k_gath).astype(jnp.float32)  # (B,KV,G,T,C)
+    mask = jnp.arange(C)[None, None, :] <= positions[:, :, None]     # (B,T,C)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_gath.dtype)
+    return _grouped_out(probs, v_gath)
+
+
+def gqa_paged_step(p, cfg: ModelConfig, x, k_store, v_store, page_table,
+                   lengths, t_valid):
+    """Process T tokens per slot through a block-paged KV cache.
+
+    x: (B,T,D); k_store/v_store: (num_blocks, block_size, KV, hd) shared
+    pools; page_table: (B,P) int32; lengths: (B,) tokens already cached
+    per slot; t_valid: (B,) how many of this call's T tokens are real
+    for each slot (0 = slot idle this step).
+
+    One function covers both serving phases: decode is T=1/t_valid=1,
+    chunked prefill is T=chunk with t_valid up to chunk — slots may mix
+    phases freely within a call.  K/V are scattered through the page
+    table *before* the gather, so in-chunk causal self-attention falls
+    out of the position mask.  Returns (out (B,T,D), k_store, v_store).
+    """
+    B, T, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    k_store = paged_scatter(k_store, k, page_table, lengths, t_valid)
+    v_store = paged_scatter(v_store, v, page_table, lengths, t_valid)
+    out = paged_attention(q, paged_gather(k_store, page_table),
+                          paged_gather(v_store, page_table), positions)
+    return out.reshape(B, T, -1) @ p["wo"], k_store, v_store
+
+
 # ---------------------------------------------------------------------------
 # full attention layers (projection + rope + core) — GQA
 # ---------------------------------------------------------------------------

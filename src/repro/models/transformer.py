@@ -257,6 +257,34 @@ def _decode_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, pos, *,
     return x, state
 
 
+def _paged_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, page_table,
+                    lengths, t_valid):
+    """Multi-token step through a block-paged cache (attn blocks only).
+
+    Mirrors ``_decode_sublayer`` exactly (norm/residual/constrain order)
+    so a T=1 paged step is numerically identical to a dense decode step
+    on the same cache content.
+    """
+    block, mlp = desc
+    assert block == "attn", block
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["norm1"], x)
+    y, k, v = A.gqa_paged_step(p["attn"], cfg, h, state["k"], state["v"],
+                               page_table, lengths, t_valid)
+    state = {"k": k, "v": v}
+    x = x + y
+    x = constrain(x, ("pod", "data"), None, None)
+    if mlp != "none":
+        h = norm(p["norm2"], x)
+        if mlp == "dense":
+            x = x + mlp_forward(p["mlp"], cfg.mlp_act, h)
+        else:
+            y, _ = moe_forward(p["moe"], cfg, h)
+            x = x + y
+        x = constrain(x, ("pod", "data"), None, None)
+    return x, state
+
+
 # ---------------------------------------------------------------------------
 # positions
 # ---------------------------------------------------------------------------
@@ -529,6 +557,89 @@ class TransformerLM:
             x, blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
         new_cache["blocks"] = blocks
         logits = self._head(params, x)[:, 0]
+        return logits, new_cache
+
+    # -- paged serving ------------------------------------------------------
+    def supports_paged(self) -> bool:
+        """Block-paged decode covers pure-GQA stacks (per-slot recurrent
+        state for mamba/xlstm/MLA-latent blocks is a separate item)."""
+        cfg = self.cfg
+        descs = list(self.prefix_descs) + list(self.period_descs)
+        return (all(d[0] == "attn" for d in descs)
+                and not cfg.sliding_window and cfg.rope != "mrope")
+
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16):
+        """Shared block pool: every attn layer gets (nb, bs, KV, hd) K/V
+        stores (periodic layers stacked on a leading scan axis).  There
+        is no batch axis — slots share the pool through page tables."""
+        cfg = self.cfg
+        if not self.supports_paged():
+            raise NotImplementedError(
+                f"paged cache needs an attention-only stack without "
+                f"sliding window/mrope (family={cfg.family!r})")
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+        def store():
+            return {"k": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+                    "v": jnp.zeros((num_blocks, block_size, kv, hd), dtype)}
+
+        cache: Dict[str, Any] = {}
+        if self.prefix_descs:
+            cache["prefix"] = [store() for _ in self.prefix_descs]
+        blocks = {}
+        for j in range(len(self.period_descs)):
+            one = store()
+            blocks[f"s{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (self.n_periods,) + a.shape).copy(), one)
+        cache["blocks"] = blocks
+        return cache
+
+    def paged_step(self, params, cache, tokens, page_table, lengths, t_valid):
+        """Advance each slot by up to T tokens through the paged cache.
+
+        tokens: (B,T) int32; page_table: (B,P) int32; lengths: (B,)
+        tokens already cached per slot; t_valid: (B,) in [0,T] tokens of
+        this call that are real per slot.  Covers decode (T=1) and
+        chunked prefill (T=chunk) uniformly; slots may mix phases.
+        Returns (logits (B,V) at each slot's last valid token, cache).
+        """
+        x = self._embed(params, tokens)
+        new_cache: Dict[str, Any] = {}
+        if self.prefix_descs:
+            pc = []
+            for i, desc in enumerate(self.prefix_descs):
+                x, st = _paged_sublayer(params["prefix"][i], self.cfg, desc, x,
+                                        cache["prefix"][i], page_table,
+                                        lengths, t_valid)
+                pc.append(st)
+            new_cache["prefix"] = pc
+
+        def body(x, xs):
+            pp, cc = xs
+            states = {}
+            for j, desc in enumerate(self.period_descs):
+                x, st = _paged_sublayer(pp[f"s{j}"], self.cfg, desc, x,
+                                        cc[f"s{j}"], page_table, lengths,
+                                        t_valid)
+                states[f"s{j}"] = st
+            return x, states
+
+        if self.unroll:
+            per = []
+            for i in range(self.n_periods):
+                x, st = body(x, jax.tree.map(
+                    lambda a: a[i], (params["blocks"], cache["blocks"])))
+                per.append(st)
+            blocks = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *per)
+        else:
+            x, blocks = jax.lax.scan(body, x, (params["blocks"],
+                                               cache["blocks"]))
+        new_cache["blocks"] = blocks
+        last = jnp.clip(t_valid - 1, 0, None)                    # (B,)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,D)
+        logits = self._head(params, x_last)[:, 0]
         return logits, new_cache
 
     # -- loss ---------------------------------------------------------------------

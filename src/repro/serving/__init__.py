@@ -1,5 +1,8 @@
 from .engine import ServeEngine, GenerationResult
+from .kv_cache import (BlockAllocator, CacheFullError, paged_gather,
+                       paged_scatter)
 from .steps import make_prefill_step, make_decode_step
 
-__all__ = ["ServeEngine", "GenerationResult", "make_prefill_step",
-           "make_decode_step"]
+__all__ = ["ServeEngine", "GenerationResult", "BlockAllocator",
+           "CacheFullError", "paged_gather", "paged_scatter",
+           "make_prefill_step", "make_decode_step"]

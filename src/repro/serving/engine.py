@@ -11,16 +11,30 @@ this replaces, the decode loop never waits for a full group:
     slice of the KV cache is spliced into the live cache, so decoding
     of in-flight sequences is never interrupted.
 
-All slots share one scalar decode position (sequences are left-aligned
-by padding, like the fixed-group engine before it), so a prompt longer
+Two cache regimes share this scheduler:
+
+**Dense (legacy / any model)** — all slots share one scalar decode
+position (sequences are left-aligned by padding), so a prompt longer
 than the current position waits until the position catches up — or
 until the batch drains, at which point the engine re-anchors with a
-fresh prefill.
+fresh prefill.  The join splice is model-agnostic: the batch axis of
+every cache leaf is discovered once via ``jax.eval_shape`` (comparing
+cache shapes for batch B vs B+1), so any model exposing
+``prefill``/``decode_step`` works — transformer, MLA, hybrid — without
+per-model axis annotations.
 
-The cache splice is model-agnostic: the batch axis of every cache leaf
-is discovered once via ``jax.eval_shape`` (comparing cache shapes for
-batch B vs B+1), so any model exposing ``prefill``/``decode_step``
-works — transformer, MLA, hybrid — without per-model axis annotations.
+**Paged (models with ``init_paged_cache``/``paged_step``)** — the KV
+cache is one shared pool of fixed-size blocks (``kv_cache.py``); each
+slot owns a page table and a true position counter, and attention masks
+by per-slot length instead of shared left padding.  Joins no longer pay
+a full-position prefill: a newcomer's prompt is consumed in bounded
+``prefill_chunk``-token steps *in the same batched calls* that keep
+decoding the in-flight slots, so join cost is independent of how long
+the batch has been running.  Blocks are reserved worst-case at
+admission (prompt + max_new), extended lazily block-by-block as decode
+crosses boundaries, and freed in full on eviction; a request whose
+reservation does not fit stays queued — never a mid-decode allocation
+failure.
 
 The engine is also usable as a pipeline TensorFilter
 (``as_pipeline_filter``): batched prompt tensors stream in, generated
@@ -38,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .kv_cache import BlockAllocator
 from .steps import make_decode_step, make_prefill_step
 
 
@@ -69,17 +84,51 @@ class _Slot:
             or max_new <= 1
 
 
+class _PagedSlot:
+    """Per-slot decode state in paged mode: true position counter lives
+    in the engine's ``_lengths`` array; this tracks ownership."""
+    __slots__ = ("rid", "prompt", "tokens", "t_submit", "done", "blocks",
+                 "reserve_left", "prefill_off")
+
+    def __init__(self, req: _Request, blocks: List[int], reserve_left: int):
+        self.rid = req.rid
+        self.prompt = req.prompt
+        self.tokens: List[int] = []
+        self.t_submit = req.t_submit
+        self.done = False
+        self.blocks = blocks          # physical block ids, page order
+        self.reserve_left = reserve_left  # blocks still claimable lazily
+        self.prefill_off = 0          # prompt tokens already cached
+
+
 class ServeEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
                  capacity: int = 256, max_new_tokens: int = 16,
                  cache_dtype=jnp.float32, greedy: bool = True,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, paged: Optional[bool] = None,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 32):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.capacity = capacity
         self.max_new_tokens = max_new_tokens
         self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        # paged mode: auto-on when the model implements the protocol
+        has_paged = (hasattr(model, "init_paged_cache")
+                     and hasattr(model, "paged_step")
+                     and (not hasattr(model, "supports_paged")
+                          or model.supports_paged()))
+        if paged and not has_paged:
+            raise ValueError(
+                f"paged=True but {type(model).__name__} does not implement "
+                "init_paged_cache/paged_step (or supports_paged() is False)")
+        if paged and not greedy:
+            raise NotImplementedError("paged mode samples greedily")
+        # auto mode prefers dense when sampling: the dense decode step is
+        # the one that knows how to draw from the categorical
+        self.paged = (has_paged and greedy) if paged is None else bool(paged)
         self._prefill = jax.jit(make_prefill_step(model, capacity, cache_dtype),
                                 static_argnames=())
         self._decode = jax.jit(make_decode_step(model, greedy=greedy))
@@ -92,12 +141,30 @@ class ServeEngine:
         self._batch_axes = None       # cache pytree of batch-axis indices
         self._lock = threading.Lock()
         self._next_rid = 0
+        # paged-mode state: block pool + per-slot page tables / lengths
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self._pages_per_slot = -(-capacity // block_size)
+        if num_blocks is None:
+            num_blocks = batch_size * self._pages_per_slot
+        self.allocator = BlockAllocator(num_blocks, block_size) \
+            if self.paged else None
+        self._page_table = np.zeros((batch_size, self._pages_per_slot),
+                                    np.int32)
+        self._lengths = np.zeros((batch_size,), np.int32)
+        self._reserved = 0            # lazily-claimable blocks promised out
+        # donate the cache: the pool is rewritten every tick, and without
+        # donation XLA copies all num_blocks*block_size K/V per token
+        self._paged_fn = jax.jit(model.paged_step, donate_argnums=(1,)) \
+            if self.paged else None
+        self._paged_cache = None
         # scheduler counters
         self.n_batches = 0            # prefill launches (back-compat alias)
         self.n_requests = 0
         self.n_prefills = 0
         self.n_joins = 0              # requests admitted mid-decode
         self.n_evictions = 0          # slots freed by eos/max_new
+        self.n_prefill_chunks = 0     # paged: bounded prefill steps run
 
     # -- synchronous fixed batch API (kept for benchmarks/back-compat) ------
     def generate_batch(self, prompts: np.ndarray,
@@ -152,6 +219,8 @@ class ServeEngine:
 
         Returns results for requests that completed during this step.
         """
+        if self.paged:
+            return self._step_paged()
         self._admit()
         finished = self._evict()
         if self.n_active == 0:
@@ -274,6 +343,133 @@ class ServeEngine:
                 request_id=slot.rid, prompt=slot.prompt,
                 tokens=np.asarray(slot.tokens, np.int32),
                 latency_s=now - slot.t_submit))
+            self._slots[i] = None
+            self.n_evictions += 1
+        return out
+
+    # -- paged scheduler ----------------------------------------------------
+    def _step_paged(self) -> List[GenerationResult]:
+        """One engine tick in paged mode.
+
+        A single batched ``paged_step`` call advances every busy slot:
+        decoding slots feed their last token (t_valid=1), slots still
+        prefilling feed their next ``prefill_chunk`` prompt tokens, idle
+        slots ride along masked out (t_valid=0).  T buckets to just two
+        shapes — 1 (pure decode) and ``prefill_chunk`` — so jit compiles
+        at most twice.
+        """
+        self._admit_paged()
+        finished = self._evict_paged()
+        busy = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        if not busy:
+            return finished
+        if self._paged_cache is None:
+            self._paged_cache = self.model.init_paged_cache(
+                self.allocator.num_blocks, self.block_size,
+                dtype=self.cache_dtype)
+        prefilling = any(s.prefill_off < len(s.prompt) for _, s in busy)
+        T = self.prefill_chunk if prefilling else 1
+        tokens = np.zeros((self.batch_size, T), np.int32)
+        t_valid = np.zeros((self.batch_size,), np.int32)
+        for i, slot in busy:
+            if slot.done:
+                continue
+            if slot.prefill_off < len(slot.prompt):
+                n = min(T, len(slot.prompt) - slot.prefill_off)
+                tokens[i, :n] = slot.prompt[slot.prefill_off:
+                                            slot.prefill_off + n]
+                t_valid[i] = n
+            elif self._lengths[i] >= self.capacity:
+                slot.done = True      # cache strip exhausted: truncate
+            else:
+                tokens[i, 0] = slot.tokens[-1]
+                t_valid[i] = 1
+        if not t_valid.any():
+            return finished + self._evict_paged()
+        for i, slot in busy:
+            if t_valid[i]:
+                self._extend_blocks(i, slot,
+                                    int(self._lengths[i]) + int(t_valid[i]))
+        logits, self._paged_cache = self._paged_fn(
+            self.params, self._paged_cache, jnp.asarray(tokens),
+            jnp.asarray(self._page_table), jnp.asarray(self._lengths),
+            jnp.asarray(t_valid))
+        logits = np.asarray(logits)
+        if prefilling:
+            self.n_prefill_chunks += 1
+        for i, slot in busy:
+            if not t_valid[i]:
+                continue
+            was_prefilling = slot.prefill_off < len(slot.prompt)
+            self._lengths[i] += t_valid[i]
+            if was_prefilling:
+                slot.prefill_off += int(t_valid[i])
+                if slot.prefill_off < len(slot.prompt):
+                    continue          # more chunks to go; no token yet
+                self.n_prefills += 1
+                self.n_batches += 1
+            slot.tokens.append(int(np.argmax(logits[i])))
+            if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
+                    or len(slot.tokens) >= self.max_new_tokens):
+                slot.done = True
+        return finished + self._evict_paged()
+
+    def _admit_paged(self) -> None:
+        """Admit queued requests into free slots, FIFO.  A request needs
+        a slot plus a worst-case block reservation (prompt + max_new,
+        capped at capacity); the queue head blocks until it fits — the
+        request stays queued, decode continues, nothing crashes."""
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        mid_decode = self.n_active > 0
+        joins = []
+        with self._lock:
+            while free and self._pending:
+                req = self._pending[0]
+                plen = req.prompt.shape[0]
+                needed = self.allocator.blocks_for(
+                    min(plen + self.max_new_tokens, self.capacity))
+                if needed > self.allocator.n_free - self._reserved:
+                    break
+                self._pending.popleft()
+                n_prompt = self.allocator.blocks_for(plen)
+                blocks = self.allocator.alloc(n_prompt)
+                self._reserved += needed - n_prompt
+                joins.append((free.pop(0), req, blocks, needed - n_prompt))
+        for slot_i, req, blocks, reserve in joins:
+            if mid_decode:
+                self.n_joins += 1
+            self._slots[slot_i] = _PagedSlot(req, blocks, reserve)
+            self._page_table[slot_i, :] = 0
+            self._page_table[slot_i, :len(blocks)] = blocks
+            self._lengths[slot_i] = 0
+
+    def _extend_blocks(self, slot_i: int, slot: _PagedSlot,
+                       n_tokens: int) -> None:
+        """Grow a slot's page list to cover ``n_tokens`` cached tokens,
+        drawing on its admission-time reservation (never fails)."""
+        need = -(-n_tokens // self.block_size)
+        while len(slot.blocks) < need:
+            assert slot.reserve_left > 0, "reservation under-counted"
+            (bid,) = self.allocator.alloc(1)
+            slot.blocks.append(bid)
+            slot.reserve_left -= 1
+            self._reserved -= 1
+            self._page_table[slot_i, len(slot.blocks) - 1] = bid
+
+    def _evict_paged(self) -> List[GenerationResult]:
+        out: List[GenerationResult] = []
+        now = time.monotonic()
+        for i, slot in enumerate(self._slots):
+            if slot is None or not slot.done:
+                continue
+            out.append(GenerationResult(
+                request_id=slot.rid, prompt=slot.prompt,
+                tokens=np.asarray(slot.tokens, np.int32),
+                latency_s=now - slot.t_submit))
+            self.allocator.free(slot.blocks)
+            self._reserved -= slot.reserve_left
+            self._page_table[i, :] = 0
+            self._lengths[i] = 0
             self._slots[i] = None
             self.n_evictions += 1
         return out

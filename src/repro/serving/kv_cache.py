@@ -1,0 +1,87 @@
+"""Block-paged KV cache: allocator + pure-jnp page table primitives.
+
+The serving engine's dense cache gave every slot a contiguous
+``(capacity, ...)`` strip, so admission cost one full-position prefill
+and memory scaled as ``batch_size * capacity`` even when most slots
+held short sequences.  The paged layout (cf. vLLM / the PIE backend)
+instead carves one shared pool of ``num_blocks`` fixed-size blocks:
+
+  * ``BlockAllocator`` — host-side free list.  Slots allocate blocks
+    for their prompt at admission, extend one block at a time as decode
+    crosses a block boundary, and free everything on eviction.  A
+    request that does not fit raises ``CacheFullError`` (the engine
+    catches the *admission* case and leaves the request queued).
+  * ``paged_scatter`` / ``paged_gather`` — jit-friendly primitives
+    mapping logical token positions to physical block rows through a
+    per-slot page table.  They live with the attention math in
+    ``models/attention.py`` (the models layer must not depend on
+    serving) and are re-exported here as the cache-layout API.
+
+Layout convention: storage is ``(num_blocks, block_size, ...)``; a page
+table row ``page_table[b]`` lists the physical block of each logical
+page of slot ``b`` (unused entries may hold any valid block id — reads
+beyond a slot's true length are masked by the attention kernel, so
+stale pointers are harmless).  Logical position ``l`` of slot ``b``
+lives at flat row ``page_table[b, l // block_size] * block_size +
+l % block_size``.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterable, List
+
+from ..models.attention import paged_gather, paged_scatter  # noqa: F401
+
+__all__ = ["BlockAllocator", "CacheFullError", "paged_gather",
+           "paged_scatter"]
+
+
+class CacheFullError(RuntimeError):
+    """Raised by ``BlockAllocator.alloc`` when the pool cannot satisfy
+    the request.  The allocator state is unchanged (all-or-nothing)."""
+
+
+class BlockAllocator:
+    """Free-list allocator over a pool of fixed-size KV blocks."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # FIFO reuse keeps physical placement deterministic for tests
+        self._free: collections.deque = collections.deque(range(num_blocks))
+        self._live: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` (at least one)."""
+        return max(1, -(-int(n_tokens) // self.block_size))
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Take ``n`` blocks off the free list (all-or-nothing)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise CacheFullError(
+                f"need {n} blocks, only {len(self._free)}/{self.num_blocks} free")
+        out = [self._free.popleft() for _ in range(n)]
+        self._live.update(out)
+        return out
+
+    def free(self, blocks: Iterable[int]) -> None:
+        """Return blocks to the pool; double/foreign frees raise."""
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(f"block {b} is not allocated (double free?)")
+            self._live.remove(b)
+            self._free.append(b)

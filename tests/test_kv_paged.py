@@ -1,0 +1,380 @@
+"""Engine conformance suite for the block-paged KV cache.
+
+Three layers of guarantees, checked bottom-up:
+
+  * ``BlockAllocator`` — free-list invariants (no double allocation,
+    conservation, all-or-nothing failure) under unit + property tests;
+  * the paged decode path — bit-for-bit identical logits to the dense
+    decode path on a toy transformer, including through a *shuffled*
+    page table, and the paged Pallas kernel against its oracle;
+  * the ``ServeEngine`` paged scheduler — mid-decode joins produce the
+    same tokens as a fresh dense run (the left-pad approximation the
+    paged cache removes), eviction returns every block to the pool, and
+    a request that does not fit the pool stays queued without crashing.
+
+``hypothesis`` is optional (mirrors tests/test_property.py): the
+property test skips without it, deterministic randomized fallbacks
+always run.
+"""
+import importlib.util
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serving import BlockAllocator, CacheFullError, ServeEngine
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+TINY = ModelConfig(
+    arch_id="tiny-paged", family="dense", n_layers=2, d_model=32,
+    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+    norm="rmsnorm", mlp_act="swiglu", rope="rope",
+    param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _fresh_dense_tokens(model, params, prompt, max_new, capacity=64,
+                        eos_id=None):
+    """Oracle: the prompt served alone, dense prefill + dense decode."""
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None],
+                                  capacity=capacity, cache_dtype=jnp.float32)
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    while len(toks) < max_new and toks[-1] != eos_id:
+        tok = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, cache, tok, jnp.int32(pos))
+        toks.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return toks
+
+
+# -- BlockAllocator -----------------------------------------------------------
+
+def test_allocator_alloc_free_roundtrip():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    got = a.alloc(3)
+    assert len(got) == len(set(got)) == 3
+    assert a.n_free == 5 and a.n_live == 3
+    a.free(got)
+    assert a.n_free == 8 and a.n_live == 0
+
+
+def test_allocator_full_is_all_or_nothing():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    a.alloc(3)
+    before = a.n_free
+    with pytest.raises(CacheFullError):
+        a.alloc(2)                     # only 1 free
+    assert a.n_free == before          # state untouched by the failure
+    assert len(a.alloc(1)) == 1        # the last block is still available
+
+
+def test_allocator_double_free_raises():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    (b,) = a.alloc(1)
+    a.free([b])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([b])
+    with pytest.raises(ValueError):
+        a.free([99])                   # foreign block
+
+
+def test_allocator_blocks_for():
+    a = BlockAllocator(num_blocks=4, block_size=8)
+    assert a.blocks_for(0) == 1        # a slot always owns >= 1 block
+    assert a.blocks_for(8) == 1
+    assert a.blocks_for(9) == 2
+
+
+def _run_alloc_sequence(ops):
+    """Shared property body: ops is a list of (is_alloc, size_or_pick)."""
+    a = BlockAllocator(num_blocks=12, block_size=4)
+    live = []                          # allocation groups
+    for is_alloc, x in ops:
+        if is_alloc:
+            try:
+                got = a.alloc(x)
+            except CacheFullError:
+                assert x > a.n_free    # only legitimate overflow raises
+                continue
+            flat = [b for g in live for b in g]
+            assert not set(got) & set(flat), "double allocation"
+            live.append(got)
+        elif live:
+            a.free(live.pop(x % len(live)))
+        # conservation: every block is free xor live, exactly once
+        n_live = sum(len(g) for g in live)
+        assert a.n_free + n_live == a.num_blocks
+        assert a.n_live == n_live
+    for g in live:
+        a.free(g)
+    assert a.n_free == a.num_blocks
+
+
+def test_allocator_random_sequences_deterministic():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        ops = [(bool(rng.integers(0, 2)), int(rng.integers(0, 8)))
+               for _ in range(60)]
+        _run_alloc_sequence(ops)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 15)),
+                    max_size=80))
+    def test_allocator_property_no_double_alloc_conservation(ops):
+        _run_alloc_sequence(ops)
+
+
+# -- paged decode vs dense decode: bit-for-bit --------------------------------
+
+def _copy_dense_cache_to_pages(model, dense_cache, paged_cache, page_table,
+                               block_size):
+    """Scatter a B=1 dense cache's rows into pool blocks per the table."""
+    pt = np.asarray(page_table)[0]
+    cap = len(pt) * block_size
+
+    def to_pages(dense_leaf, paged_leaf):
+        src = np.asarray(dense_leaf)[:, 0]         # (L, C, kv, hd)
+        out = np.asarray(paged_leaf).copy()
+        for logical in range(min(cap, src.shape[1])):
+            blk, off = pt[logical // block_size], logical % block_size
+            out[:, blk, off] = src[:, logical]
+        return jnp.asarray(out)
+
+    return jax.tree.map(to_pages, dense_cache, paged_cache)
+
+
+def test_paged_decode_logits_match_dense_bitwise(tiny_model):
+    """Same cache content, shuffled physical placement: the paged read/
+    write path must reproduce dense decode logits exactly, step after
+    step (both caches evolve through their own insert paths)."""
+    model, params = tiny_model
+    bs, P = 4, 8                       # C = 32
+    cap = bs * P
+    prompt = np.array([5, 9, 3, 17, 30], np.int32)
+    logits_d, dense = model.prefill(params, jnp.asarray(prompt)[None],
+                                    capacity=cap, cache_dtype=jnp.float32)
+    pt = jnp.asarray(
+        np.random.default_rng(1).permutation(P).astype(np.int32)[None])
+    paged = _copy_dense_cache_to_pages(
+        model, dense, model.init_paged_cache(P, bs, dtype=jnp.float32),
+        pt, bs)
+    lengths = jnp.asarray([len(prompt)], jnp.int32)
+    ones = jnp.asarray([1], jnp.int32)
+    tok = jnp.asarray([[int(jnp.argmax(logits_d[0]))]], jnp.int32)
+    for step in range(8):
+        ld, dense = model.decode_step(params, dense, tok,
+                                      jnp.int32(int(lengths[0])))
+        lp, paged = model.paged_step(params, paged, tok, pt, lengths, ones)
+        assert np.array_equal(np.asarray(ld), np.asarray(lp)), \
+            f"paged/dense logits diverged at decode step {step}"
+        tok = jnp.asarray([[int(jnp.argmax(ld[0]))]], jnp.int32)
+        lengths = lengths + 1
+
+
+def test_chunked_prefill_invariant_to_chunk_size(tiny_model):
+    """The same prompt prefilled in 1/3/16-token chunks must land in the
+    same engine tokens — chunking is a scheduling choice, not semantics."""
+    model, params = tiny_model
+    prompt = np.arange(1, 11, dtype=np.int32)
+    runs = []
+    for chunk in (1, 3, 16):
+        eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                          max_new_tokens=5, block_size=4,
+                          prefill_chunk=chunk)
+        assert eng.paged
+        runs.append(list(eng.serve([prompt])[0].tokens))
+    assert runs[0] == runs[1] == runs[2]
+
+
+# -- engine conformance: joins, eviction, cache-full --------------------------
+
+def test_mid_decode_join_matches_fresh_dense_run(tiny_model):
+    """The tentpole claim: a request joining mid-decode decodes at its
+    *true* positions (no left-pad shift), so its tokens equal a fresh
+    dense run of that prompt alone."""
+    model, params = tiny_model
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=8, block_size=4, prefill_chunk=4)
+    rng = np.random.default_rng(3)
+    first = rng.integers(1, TINY.vocab_size, 6).astype(np.int32)
+    eng.submit(first)
+    for _ in range(4):                 # decode well past the join point
+        eng.step()
+    late = rng.integers(1, TINY.vocab_size, 9).astype(np.int32)
+    eng.submit(late)
+    results = []
+    while eng.has_work:
+        results += eng.step()
+    assert eng.n_joins == 1
+    by_id = {r.request_id: list(r.tokens) for r in results}
+    assert by_id[0] == _fresh_dense_tokens(model, params, first, 8)
+    assert by_id[1] == _fresh_dense_tokens(model, params, late, 8)
+
+
+def test_concurrent_slots_each_match_fresh_runs(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 3, 7, 12)]
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=6, block_size=4, prefill_chunk=4)
+    res = eng.serve(prompts)
+    assert [r.request_id for r in res] == [0, 1, 2, 3, 4]
+    for p, r in zip(prompts, res):
+        assert list(r.tokens) == _fresh_dense_tokens(model, params, p, 6)
+    assert eng.n_prefill_chunks > eng.n_prefills == 5  # chunked, not one-shot
+
+
+def test_eviction_frees_all_blocks(tiny_model):
+    model, params = tiny_model
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4, prefill_chunk=4)
+    total = eng.allocator.num_blocks
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+               for n in (11, 4, 6)]
+    eng.serve(prompts)
+    assert eng.n_evictions == 3
+    assert eng.allocator.n_free == total
+    assert eng.allocator.n_live == 0
+    assert eng._reserved == 0
+
+
+def test_blocks_freed_as_each_request_finishes(tiny_model):
+    """Pool usage must shrink the moment a slot is evicted, not at
+    drain: that is what lets new requests join mid-decode."""
+    model, params = tiny_model
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=3, block_size=4, prefill_chunk=8)
+    short = np.array([2, 3], np.int32)
+    long = np.arange(1, 13, dtype=np.int32)
+    eng.submit(short)
+    eng.submit(long)
+    in_flight_free = None
+    while eng.has_work:
+        done = eng.step()
+        if done and eng.n_active == 1 and in_flight_free is None:
+            in_flight_free = eng.allocator.n_free
+    assert in_flight_free is not None
+    # after the short request finished, only the long one's blocks remain
+    assert in_flight_free > 0
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def test_cache_full_request_stays_queued(tiny_model):
+    """A pool sized for one worst-case request at a time: the second
+    request must wait (no crash, no partial admission) and still run to
+    the correct tokens once the first evicts."""
+    model, params = tiny_model
+    # worst case per request: ceil((8 prompt + 4 new) / 4) = 3 blocks
+    eng = ServeEngine(model, params, batch_size=2, capacity=16,
+                      max_new_tokens=4, block_size=4, num_blocks=3,
+                      prefill_chunk=4)
+    rng = np.random.default_rng(9)
+    a = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)
+    b = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)
+    res = eng.serve([a, b])
+    assert len(res) == 2
+    assert eng.n_joins == 0            # b could only start after a evicted
+    for p, r in zip((a, b), res):
+        assert list(r.tokens) == _fresh_dense_tokens(model, params, p, 4,
+                                                     capacity=32)
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def test_paged_mode_autodetects_and_validates(tiny_model):
+    class NoPaged:
+        def prefill(self, *a, **k): ...
+        def decode_step(self, *a, **k): ...
+
+    with pytest.raises(ValueError, match="paged=True"):
+        ServeEngine(NoPaged(), params={}, paged=True)
+    eng = ServeEngine(NoPaged(), params={})
+    assert not eng.paged               # dense fallback, no allocator
+    assert eng.allocator is None
+    # sampling engines must keep working: auto mode falls back to dense
+    # (which knows categorical sampling) instead of raising
+    model, params = tiny_model
+    eng = ServeEngine(model, params, greedy=False)
+    assert not eng.paged
+    with pytest.raises(NotImplementedError, match="greedily"):
+        ServeEngine(model, params, greedy=False, paged=True)
+
+
+# -- paged decode-attention kernel vs oracle ----------------------------------
+
+def test_paged_kernel_matches_paged_ref():
+    from repro.kernels.decode_attention.kernel import paged_decode_attention
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    rng = np.random.default_rng(0)
+    B, H, KV, hd = 3, 4, 2, 16
+    nb, bs, P = 12, 8, 3
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nb, KV, bs, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nb, KV, bs, hd)), jnp.float32)
+    pt = jnp.asarray(rng.choice(nb, size=(B, P), replace=False).astype(np.int32))
+    lengths = jnp.asarray([5, P * bs, 1], jnp.int32)
+    o = paged_decode_attention(q, kp, vp, pt, lengths)
+    r = paged_decode_attention_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_ops_wrapper_matches_ref_in_engine_layout():
+    """ops.paged_decode_attention_bhd takes the ServeEngine leaf layout
+    (num_blocks, block_size, KV, hd); its transposition into the kernel
+    layout must preserve the oracle's result."""
+    from repro.kernels.decode_attention import ops
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    rng = np.random.default_rng(4)
+    B, H, KV, hd = 2, 4, 2, 16
+    nb, bs, P = 10, 8, 3
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    k_eng = jnp.asarray(rng.standard_normal((nb, bs, KV, hd)), jnp.float32)
+    v_eng = jnp.asarray(rng.standard_normal((nb, bs, KV, hd)), jnp.float32)
+    pt = jnp.asarray(rng.choice(nb, size=(B, P), replace=False).astype(np.int32))
+    lengths = jnp.asarray([6, 20], jnp.int32)
+    o = ops.paged_decode_attention_bhd(q, k_eng, v_eng, pt, lengths)
+    r = paged_decode_attention_ref(q[:, 0], jnp.moveaxis(k_eng, 2, 1),
+                                   jnp.moveaxis(v_eng, 2, 1), pt, lengths)
+    assert o.shape == (B, 1, H, hd)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_ref_equals_dense_ref_on_contiguous_table():
+    """Identity page table == plain dense cache: the two oracles must
+    coincide, tying the paged kernel stack back to the dense one."""
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_ref, paged_decode_attention_ref)
+    rng = np.random.default_rng(2)
+    B, H, KV, hd = 2, 4, 4, 8
+    bs, P = 4, 4
+    C = bs * P
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((B, KV, C, hd)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((B, KV, C, hd)), jnp.float32)
+    lengths = jnp.asarray([7, C], jnp.int32)
+    # identity layout: row b uses blocks [b*P .. b*P+P-1] in order
+    kp = jnp.moveaxis(kd.reshape(B, KV, P, bs, hd), 1, 2).reshape(
+        B * P, KV, bs, hd)
+    vp = jnp.moveaxis(vd.reshape(B, KV, P, bs, hd), 1, 2).reshape(
+        B * P, KV, bs, hd)
+    pt = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    r_paged = paged_decode_attention_ref(q, kp, vp, pt, lengths)
+    r_dense = decode_attention_ref(q, kd, vd, lengths)
+    np.testing.assert_array_equal(np.asarray(r_paged), np.asarray(r_dense))

@@ -10,7 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core import Buffer, parse_pipeline
+from repro.core.elements.batcher import TensorBatcher, TensorUnbatcher
 from repro.core.elements.routing import TensorMerge, TensorMux
+from repro.core.elements.sinks import TensorSink
 from repro.core.elements.transform import (apply_chain_numpy, fold_affine,
                                            parse_chain)
 from repro.core.stream import TensorSpec
@@ -35,6 +37,45 @@ def test_caps_rank_agnostic_negotiation_fallback():
     # dtype must still match
     assert not TensorSpec(dims=(4,), dtype="float32").compatible(
         TensorSpec(dims=(4,), dtype="uint8"))
+
+
+def _batcher_roundtrip(n_frames, max_batch, dims, n_chunks, seed):
+    """Shared body: random frames through tensor_batcher→tensor_unbatcher
+    must come back identical — data, chunk arity, pts, meta, order —
+    including the EOS partial-flush path (n_frames % max_batch != 0)."""
+    batcher = TensorBatcher("b", max_batch=max_batch)
+    unb = TensorUnbatcher("u")
+    sink = TensorSink("s", keep=True)
+    batcher.link(unb)
+    unb.link(sink)
+    rng = np.random.default_rng(seed)
+    frames = [tuple(rng.standard_normal(dims).astype(np.float32)
+                    for _ in range(n_chunks)) for _ in range(n_frames)]
+    pts = [float(rng.uniform(0, 100)) for _ in range(n_frames)]
+    for i, chunks in enumerate(frames):
+        batcher.chain(batcher.sinkpad,
+                      Buffer(chunks, pts=pts[i], meta={"i": i, "tag": f"f{i}"}))
+    batcher.chain(batcher.sinkpad, Buffer.eos_buffer())  # flush the remainder
+    assert sink.eos_seen.is_set()
+    assert sink.n_received == n_frames
+    for i, (buf, chunks) in enumerate(zip(sink.buffers, frames)):
+        assert buf.pts == pts[i]
+        assert buf.meta == {"i": i, "tag": f"f{i}"}
+        assert len(buf.chunks) == n_chunks
+        for got, sent in zip(buf.chunks, chunks):
+            np.testing.assert_array_equal(np.asarray(got), sent)
+    if n_frames % max_batch:
+        assert batcher.n_eos_flushes == 1
+
+
+def test_batcher_unbatcher_roundtrip_fallback():
+    for n_frames, max_batch, dims, n_chunks in [
+            (1, 4, (3,), 1),           # single frame, pure EOS flush
+            (8, 4, (2, 5), 1),         # exact multiple, no partial
+            (7, 3, (4,), 2),           # partial final batch, multi-chunk
+            (5, 1, (1,), 1)]:          # batch size 1 degenerates to pass-thru
+        _batcher_roundtrip(n_frames, max_batch, dims, n_chunks,
+                           seed=n_frames * 31 + max_batch)
 
 
 if HAVE_HYPOTHESIS:
@@ -128,6 +169,13 @@ def test_aggregator_window_count(frames_in, flush, n):
     assert sink.n_received == expected
     for b in sink.buffers:
         assert b.data.shape == (2 * frames_in,)
+
+
+@given(st.integers(1, 12), st.integers(1, 5), dims_st, st.integers(1, 3),
+       st.integers(0, 10_000))
+def test_batcher_unbatcher_roundtrip(n_frames, max_batch, dims, n_chunks,
+                                     seed):
+    _batcher_roundtrip(n_frames, max_batch, tuple(dims), n_chunks, seed)
 
 
 @given(st.integers(2, 16), st.integers(1, 8))

@@ -35,6 +35,21 @@ def test_param_specs_match_rank_and_rules():
     assert spec_leaves["blocks/s0/mlp/w_down"] == P(None, "model", "data")
 
 
+@pytest.mark.parametrize("arch", ["glm4-9b", "qwen2.5-32b", "dbrx-132b",
+                                  "xlstm-350m"])
+def test_param_specs_rank_invariant_across_configs(arch):
+    """Every config's spec tree must stay within leaf ranks (eval_shape
+    only — no compilation), so new architectures can't silently ship
+    rules that over-index their parameters."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(shapes, dp=("data",))
+    shape_leaves = _leaves_with_paths(shapes)
+    for path, spec in _leaves_with_paths(specs).items():
+        assert len(spec) <= shape_leaves[path].ndim, path
+
+
 def test_param_specs_divisibility_filter():
     cfg = get_config("whisper-tiny", smoke=False)
     model = build_model(cfg)
@@ -75,7 +90,7 @@ def test_cache_specs_batched_decode_shards_batch():
 
 DRYRUN_SMOKE = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
@@ -84,18 +99,20 @@ from repro.models.sharding import param_specs
 from repro.training import TrainState, make_train_step
 from repro.optim import adamw_init
 
-mesh = jax.make_mesh((2, 2), ("data", "model"))
-cfg = get_config("smollm-360m", smoke=True)
+dp, tp = {mesh}
+mesh = jax.make_mesh((dp, tp), ("data", "model"))
+cfg = get_config("{arch}", smoke=True)
 model = build_model(cfg, remat=True)
 params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-pspecs = param_specs(params_s, dp=("data",), axis_sizes={"data": 2, "model": 2})
+pspecs = param_specs(params_s, dp=("data",),
+                     axis_sizes={{"data": dp, "model": tp}})
 state_s = jax.eval_shape(lambda p: TrainState(p, adamw_init(p)), params_s)
 state_specs = TrainState(params=pspecs,
                          opt=type(state_s.opt)(step=P(), m=pspecs, v=pspecs))
 state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
-batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
-         "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
-batch_sh = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+batch = {{"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+          "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}}
+batch_sh = {{k: NamedSharding(mesh, P("data", None)) for k in batch}}
 step = make_train_step(model)
 with mesh:
     lowered = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(state_s, batch)
@@ -107,9 +124,25 @@ print("COMPILED_OK", ca.get("flops", 0) > 0)
 """
 
 
-def test_dryrun_smoke_on_4_host_devices():
+def _run_dryrun(n_dev, mesh, arch):
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run([sys.executable, "-c", DRYRUN_SMOKE], env=env,
+    src = DRYRUN_SMOKE.format(n_dev=n_dev, mesh=mesh, arch=arch)
+    out = subprocess.run([sys.executable, "-c", src], env=env,
                          capture_output=True, text=True, timeout=300,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "COMPILED_OK True" in out.stdout, out.stdout + out.stderr
+
+
+def test_dryrun_smoke_on_4_host_devices():
+    _run_dryrun(4, (2, 2), "smollm-360m")
+
+
+@pytest.mark.parametrize("n_dev,mesh,arch", [
+    (1, (1, 1), "smollm-360m"),    # degenerate mesh must still compile
+    (2, (1, 2), "smollm-360m"),    # pure tensor parallel
+    (2, (2, 1), "glm4-9b"),        # pure data parallel, second config
+    (8, (2, 4), "smollm-360m"),    # 8-host mixed
+    (8, (4, 2), "qwen2.5-32b"),    # 8-host, dp-heavy, third config
+])
+def test_dryrun_mesh_sweep(n_dev, mesh, arch):
+    _run_dryrun(n_dev, mesh, arch)
