@@ -44,6 +44,22 @@ def main():
                          "worth of blocks)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="paged mode: prompt tokens cached per join step")
+    ap.add_argument("--share-prefix", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="paged mode: map requests' common prompt prefixes "
+                         "onto already-resident KV blocks (copy-on-write; "
+                         "auto: on whenever paged)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy decode; > 0 samples from "
+                         "softmax(logits / temperature)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="restrict sampling to the k highest logits")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed (per-request, per-step keys "
+                         "are derived from it — identical across modes)")
+    ap.add_argument("--shared-prompt", type=int, default=0,
+                    help="give every request this many identical leading "
+                         "prompt tokens (exercises prefix sharing)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -51,19 +67,31 @@ def main():
         cfg = cfg.replace(param_dtype="float32", compute_dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    tri = {"auto": None, "on": True, "off": False}
     engine = ServeEngine(model, params, batch_size=args.batch,
                          capacity=args.prompt_len + args.max_new + 8,
                          max_new_tokens=args.max_new,
-                         paged={"auto": None, "on": True, "off": False}[args.paged],
+                         paged=tri[args.paged],
                          block_size=args.block_size,
                          num_blocks=args.num_blocks,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         share_prefix=tri[args.share_prefix],
+                         temperature=args.temperature,
+                         top_k=args.top_k, seed=args.seed)
 
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1")
+    if args.shared_prompt >= args.prompt_len - 1:
+        # the unique suffix needs at least one token of length spread
+        raise SystemExit("--shared-prompt must be < --prompt-len - 1")
     rng = np.random.default_rng(0)
-    lengths = [int(rng.integers(4, args.prompt_len)) for _ in range(args.requests)]
-    requests = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prompt).astype(np.int32)
+    lengths = [int(rng.integers(max(4, args.shared_prompt + 1),
+                                args.prompt_len))
+               for _ in range(args.requests)]
+    requests = [np.concatenate(
+                    [shared, rng.integers(0, cfg.vocab_size,
+                                          n - len(shared)).astype(np.int32)])
                 for n in lengths]
 
     t0 = time.perf_counter()
@@ -102,8 +130,14 @@ def main():
              else ""))
     if engine.paged:
         a = engine.allocator
+        s = engine.pool_stats()
         print(f"paged cache: {a.num_blocks} blocks x {a.block_size} tokens, "
-              f"{a.n_free} free after drain")
+              f"{s['n_free']} free / {s['n_shared']} shared / "
+              f"{s['n_private']} private after drain")
+        if engine.share_prefix:
+            print(f"prefix sharing: {engine.n_prefix_hits} hits, "
+                  f"{engine.n_shared_tokens} prompt tokens served from "
+                  f"resident blocks, {engine.n_cow_forks} COW forks")
     if args.direct:
         for r in results[:3]:
             print(f"  req {r.request_id}: prompt[{len(r.prompt)}] -> "

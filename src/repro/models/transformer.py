@@ -596,6 +596,19 @@ class TransformerLM:
         cache["blocks"] = blocks
         return cache
 
+    def copy_paged_block(self, cache, src, dst):
+        """COW fork: duplicate physical block ``src`` into ``dst`` across
+        every layer's K/V store (prefix layers keyed on axis 0, periodic
+        layers behind their leading scan axis)."""
+        out: Dict[str, Any] = {}
+        if "prefix" in cache:
+            out["prefix"] = [
+                jax.tree.map(lambda a: a.at[dst].set(a[src]), st)
+                for st in cache["prefix"]]
+        out["blocks"] = jax.tree.map(
+            lambda a: a.at[:, dst].set(a[:, src]), cache["blocks"])
+        return out
+
     def paged_step(self, params, cache, tokens, page_table, lengths, t_valid):
         """Advance each slot by up to T tokens through the paged cache.
 

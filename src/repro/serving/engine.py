@@ -32,13 +32,34 @@ a full-position prefill: a newcomer's prompt is consumed in bounded
 decoding the in-flight slots, so join cost is independent of how long
 the batch has been running.  Blocks are reserved worst-case at
 admission (prompt + max_new), extended lazily block-by-block as decode
-crosses boundaries, and freed in full on eviction; a request whose
+crosses boundaries, and released in full on eviction; a request whose
 reservation does not fit stays queued — never a mid-decode allocation
 failure.
 
-The engine is also usable as a pipeline TensorFilter
-(``as_pipeline_filter``): batched prompt tensors stream in, generated
-token tensors stream out, in request order.
+**Prefix sharing + copy-on-write (paged only)** — the block pool is
+content-addressed: whenever a slot completes a page, the engine
+registers the block under the chain digest of the token prefix it
+caches.  At admission, a joiner's prompt is matched page-by-page
+against resident blocks; matched pages are *mapped* into the new
+slot's page table with a refcount bump instead of being re-prefilled
+(a final partial page can map onto another sequence's completed tail
+block — rows past the joiner's length are masked).  Shared blocks are
+immutable: before ``paged_scatter`` would write into a block whose
+refcount exceeds one, the engine forks it — acquires a private block,
+copies the page's KV, and swaps the page-table entry — so in-flight
+slots can never observe each other's writes.  The last matched prompt
+token is always re-run through the model (``matched <= len(prompt)-1``)
+so the joiner's first sampled token has logits to come from.
+
+**Sampling** — both modes draw next tokens through one shared sampler.
+``temperature`` selects the mode: 0 (the default) is exact greedy
+argmax, > 0 samples from ``softmax(logits / temperature)`` under
+``top_k`` (an explicit ``greedy=True`` forces argmax regardless).
+Slot ``b``'s key for its ``t``-th generated token is
+``fold_in(fold_in(PRNGKey(seed), request_id), t)`` — a pure function of
+the request and step, independent of serving mode, batch composition,
+or join timing — so paged and dense serving emit identical token
+streams for the same seed.
 """
 from __future__ import annotations
 
@@ -46,14 +67,14 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kv_cache import BlockAllocator
-from .steps import make_decode_step, make_prefill_step
+from .kv_cache import ROOT_DIGEST, BlockAllocator, CacheFullError, chain_digest
+from .steps import make_decode_step, make_prefill_step, make_slot_sampler
 
 
 @dataclasses.dataclass
@@ -69,6 +90,10 @@ class _Request:
     rid: int
     prompt: np.ndarray
     t_submit: float
+    # cached _match_prefix result for a queued request, valid while the
+    # pool epoch is unchanged (no release/register since it was taken)
+    match: Optional[Tuple[List[int], List[bytes], int]] = None
+    match_epoch: int = -1
 
 
 class _Slot:
@@ -88,9 +113,10 @@ class _PagedSlot:
     """Per-slot decode state in paged mode: true position counter lives
     in the engine's ``_lengths`` array; this tracks ownership."""
     __slots__ = ("rid", "prompt", "tokens", "t_submit", "done", "blocks",
-                 "reserve_left", "prefill_off")
+                 "reserve_left", "prefill_off", "digests")
 
-    def __init__(self, req: _Request, blocks: List[int], reserve_left: int):
+    def __init__(self, req: _Request, blocks: List[int], reserve_left: int,
+                 prefill_off: int = 0, digests: Optional[List[bytes]] = None):
         self.rid = req.rid
         self.prompt = req.prompt
         self.tokens: List[int] = []
@@ -98,16 +124,20 @@ class _PagedSlot:
         self.done = False
         self.blocks = blocks          # physical block ids, page order
         self.reserve_left = reserve_left  # blocks still claimable lazily
-        self.prefill_off = 0          # prompt tokens already cached
+        self.prefill_off = prefill_off    # prompt tokens already cached
+        self.digests = digests if digests is not None else []  # per full page
 
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_size: int = 4,
                  capacity: int = 256, max_new_tokens: int = 16,
-                 cache_dtype=jnp.float32, greedy: bool = True,
-                 eos_id: Optional[int] = None, paged: Optional[bool] = None,
-                 block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefill_chunk: int = 32):
+                 cache_dtype=jnp.float32, greedy: Optional[bool] = None,
+                 temperature: float = 0.0, top_k: Optional[int] = None,
+                 seed: int = 0, eos_id: Optional[int] = None,
+                 paged: Optional[bool] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 32,
+                 share_prefix: Optional[bool] = None,
+                 trace_logits: bool = False):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -115,6 +145,17 @@ class ServeEngine:
         self.max_new_tokens = max_new_tokens
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
+        if temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k is not None and top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        # temperature drives the mode: 0 (the default) is exactly the
+        # greedy path, > 0 samples; an explicit greedy=True still wins
+        self._greedy = (temperature == 0) if greedy is None \
+            else bool(greedy) or temperature == 0
+        self.temperature = temperature
+        self.top_k = top_k
+        self.seed = seed
         # paged mode: auto-on when the model implements the protocol
         has_paged = (hasattr(model, "init_paged_cache")
                      and hasattr(model, "paged_step")
@@ -124,14 +165,15 @@ class ServeEngine:
             raise ValueError(
                 f"paged=True but {type(model).__name__} does not implement "
                 "init_paged_cache/paged_step (or supports_paged() is False)")
-        if paged and not greedy:
-            raise NotImplementedError("paged mode samples greedily")
-        # auto mode prefers dense when sampling: the dense decode step is
-        # the one that knows how to draw from the categorical
-        self.paged = (has_paged and greedy) if paged is None else bool(paged)
+        self.paged = has_paged if paged is None else bool(paged)
         self._prefill = jax.jit(make_prefill_step(model, capacity, cache_dtype),
                                 static_argnames=())
-        self._decode = jax.jit(make_decode_step(model, greedy=greedy))
+        self._decode = jax.jit(make_decode_step(model, greedy=True))
+        # both modes draw tokens through this one jitted sampler, so a
+        # given (seed, request, step) yields the same token either way
+        self._sample = make_slot_sampler(seed, greedy=self._greedy,
+                                         temperature=temperature or 1.0,
+                                         top_k=top_k)
         # request queue + in-flight slot map
         self._pending: collections.deque = collections.deque()
         self._slots: List[Optional[_Slot]] = [None] * batch_size
@@ -144,6 +186,12 @@ class ServeEngine:
         # paged-mode state: block pool + per-slot page tables / lengths
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
+        if share_prefix and not self.paged:
+            raise ValueError(
+                "share_prefix=True requires paged mode (the dense cache has "
+                "no block pool to share)")
+        self.share_prefix = (self.paged if share_prefix is None
+                             else bool(share_prefix))
         self._pages_per_slot = -(-capacity // block_size)
         if num_blocks is None:
             num_blocks = batch_size * self._pages_per_slot
@@ -153,11 +201,20 @@ class ServeEngine:
                                     np.int32)
         self._lengths = np.zeros((batch_size,), np.int32)
         self._reserved = 0            # lazily-claimable blocks promised out
+        self._pool_epoch = 0          # bumped on release/register: a queued
+        #                               request's cached prefix match stays
+        #                               valid while this is unchanged
         # donate the cache: the pool is rewritten every tick, and without
         # donation XLA copies all num_blocks*block_size K/V per token
         self._paged_fn = jax.jit(model.paged_step, donate_argnums=(1,)) \
             if self.paged else None
+        copy_fn = getattr(model, "copy_paged_block", _generic_copy_paged_block)
+        self._copy_block = jax.jit(copy_fn, donate_argnums=(0,)) \
+            if self.paged else None
         self._paged_cache = None
+        # optional per-request logit recording (conformance tests)
+        self.trace_logits = trace_logits
+        self.logit_trace: Dict[int, List[np.ndarray]] = {}
         # scheduler counters
         self.n_batches = 0            # prefill launches (back-compat alias)
         self.n_requests = 0
@@ -165,11 +222,17 @@ class ServeEngine:
         self.n_joins = 0              # requests admitted mid-decode
         self.n_evictions = 0          # slots freed by eos/max_new
         self.n_prefill_chunks = 0     # paged: bounded prefill steps run
+        self.n_prefix_hits = 0        # paged: admissions that mapped blocks
+        self.n_shared_tokens = 0      # prompt tokens served from shared blocks
+        self.n_cow_forks = 0          # shared blocks forked before a write
 
     # -- synchronous fixed batch API (kept for benchmarks/back-compat) ------
     def generate_batch(self, prompts: np.ndarray,
                        extra_embeds=None) -> np.ndarray:
-        """prompts: (B, S) int32 -> generated (B, max_new_tokens)."""
+        """prompts: (B, S) int32 -> generated (B, max_new_tokens).
+
+        Always decodes greedily (the continuous API carries the seeded
+        sampling path)."""
         B, S = prompts.shape
         assert B == self.batch_size, (B, self.batch_size)
         t0 = time.perf_counter()
@@ -214,6 +277,14 @@ class ServeEngine:
         with self._lock:
             return bool(self._pending) or self.n_active > 0
 
+    def pool_stats(self) -> Optional[Dict[str, int]]:
+        """Block-pool occupancy incl. shared vs private split (paged)."""
+        if self.allocator is None:
+            return None
+        stats = self.allocator.stats()
+        stats["n_reserved"] = self._reserved
+        return stats
+
     def step(self) -> List[GenerationResult]:
         """Admit what fits, run one decode step, evict what finished.
 
@@ -231,14 +302,26 @@ class ServeEngine:
                 if slot is not None:
                     slot.done = True
             return finished + self._evict()
-        token, _, cache = self._decode(self.params, self._cache, self._token,
-                                       jnp.int32(self._pos))
-        self._token, self._cache = token, cache
+        token, logits, cache = self._decode(self.params, self._cache,
+                                            self._token, jnp.int32(self._pos))
+        self._cache = cache
         self._pos += 1
-        tok = np.asarray(token[:, 0])
+        if self._greedy:
+            self._token = token
+            tok = np.asarray(token[:, 0])
+        else:
+            rows = {i: (s.rid, len(s.tokens))
+                    for i, s in enumerate(self._slots)
+                    if s is not None and not s.done}
+            tok = self._sample_rows(logits, rows)
+            self._token = jnp.asarray(tok, jnp.int32)[:, None]
+        logits_np = np.asarray(logits) if self.trace_logits else None
         for i, slot in enumerate(self._slots):
             if slot is None or slot.done:
                 continue
+            if self.trace_logits:
+                self.logit_trace.setdefault(slot.rid, []).append(
+                    logits_np[i].copy())
             slot.tokens.append(int(tok[i]))
             if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
                     or len(slot.tokens) >= self.max_new_tokens):
@@ -277,6 +360,26 @@ class ServeEngine:
                 out[i, : len(r.tokens)] = r.tokens
             return out
         return fn
+
+    # -- sampling -----------------------------------------------------------
+    def _sample_rows(self, logits,
+                     rows: Dict[int, Tuple[int, int]]) -> np.ndarray:
+        """Draw one token per batch row through the shared sampler.
+
+        ``rows`` maps batch row -> (request id, generation step); the
+        per-row key is derived from those inside the jitted sampler, so
+        a slot's draw is a pure function of (seed, request, step) —
+        serving-mode independent.  Rows absent from ``rows`` get
+        (0, 0); callers only consume rows they supplied (greedy mode
+        ignores them entirely)."""
+        rids = np.zeros((self.batch_size,), np.int32)
+        steps = np.zeros((self.batch_size,), np.int32)
+        for i, (rid, t) in rows.items():
+            rids[i] = rid
+            steps[i] = t
+        return np.asarray(self._sample(jnp.asarray(logits),
+                                       jnp.asarray(rids),
+                                       jnp.asarray(steps)))
 
     # -- scheduler internals ------------------------------------------------
     def _admit(self) -> None:
@@ -317,7 +420,13 @@ class ServeEngine:
         for slot_i, req in joins:
             batch[slot_i, self._pos - req.prompt.shape[0]:] = req.prompt
         logits, cache = self._prefill(self.params, jnp.asarray(batch), None)
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if self._greedy:
+            first_np = np.asarray(jnp.argmax(logits, axis=-1)
+                                  .astype(jnp.int32))
+        else:
+            first_np = self._sample_rows(
+                logits, {slot_i: (req.rid, 0) for slot_i, req in joins})
+        first = jnp.asarray(first_np, jnp.int32)[:, None]
         self.n_prefills += 1
         self.n_batches += 1
         if fresh:
@@ -328,8 +437,11 @@ class ServeEngine:
             self._token = self._token.at[jnp.asarray(slot_ids), 0].set(
                 first[jnp.asarray(slot_ids), 0])
             self.n_joins += len(joins)
-        first_np = np.asarray(first[:, 0])
+        logits_np = np.asarray(logits) if self.trace_logits else None
         for slot_i, req in joins:
+            if self.trace_logits:
+                self.logit_trace.setdefault(req.rid, []).append(
+                    logits_np[slot_i].copy())
             self._slots[slot_i] = _Slot(req, first_np[slot_i], self.eos_id,
                                         self.max_new_tokens)
 
@@ -356,7 +468,9 @@ class ServeEngine:
         prefilling feed their next ``prefill_chunk`` prompt tokens, idle
         slots ride along masked out (t_valid=0).  T buckets to just two
         shapes — 1 (pure decode) and ``prefill_chunk`` — so jit compiles
-        at most twice.
+        at most twice.  Before the step, any shared block in a slot's
+        write range is forked (COW); after it, newly completed pages are
+        published to the content table for future joiners.
         """
         self._admit_paged()
         finished = self._evict_paged()
@@ -388,15 +502,17 @@ class ServeEngine:
             return finished + self._evict_paged()
         for i, slot in busy:
             if t_valid[i]:
+                self._cow_write_range(i, slot, int(self._lengths[i]),
+                                      int(t_valid[i]))
                 self._extend_blocks(i, slot,
                                     int(self._lengths[i]) + int(t_valid[i]))
         logits, self._paged_cache = self._paged_fn(
             self.params, self._paged_cache, jnp.asarray(tokens),
             jnp.asarray(self._page_table), jnp.asarray(self._lengths),
             jnp.asarray(t_valid))
-        logits = np.asarray(logits)
         if prefilling:
             self.n_prefill_chunks += 1
+        emit: Dict[int, _PagedSlot] = {}
         for i, slot in busy:
             if not t_valid[i]:
                 continue
@@ -408,17 +524,89 @@ class ServeEngine:
                     continue          # more chunks to go; no token yet
                 self.n_prefills += 1
                 self.n_batches += 1
-            slot.tokens.append(int(np.argmax(logits[i])))
-            if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
-                    or len(slot.tokens) >= self.max_new_tokens):
-                slot.done = True
+            emit[i] = slot
+        if emit:
+            # sample on the device logits; only the trace needs host copies
+            toks = self._sample_rows(
+                logits, {i: (s.rid, len(s.tokens)) for i, s in emit.items()})
+            logits_np = np.asarray(logits) if self.trace_logits else None
+            for i, slot in emit.items():
+                if self.trace_logits:
+                    self.logit_trace.setdefault(slot.rid, []).append(
+                        logits_np[i].copy())
+                slot.tokens.append(int(toks[i]))
+                if ((self.eos_id is not None
+                     and slot.tokens[-1] == self.eos_id)
+                        or len(slot.tokens) >= self.max_new_tokens):
+                    slot.done = True
+        if self.share_prefix:
+            for i, slot in busy:
+                if t_valid[i]:
+                    self._register_full_pages(i, slot)
         return finished + self._evict_paged()
+
+    def _match_prefix(self, prompt: np.ndarray) \
+            -> Tuple[List[int], List[bytes], int]:
+        """Longest resident chain matching the prompt.
+
+        Returns ``(mapped, digests, matched)``: physical blocks to map
+        at pages ``0..len(mapped)-1``, chain digests of the pages fully
+        covered by ``matched``, and the number of prompt tokens those
+        blocks serve.  Matching walks full pages by chain digest, then
+        tries to land the final partial page on another sequence's
+        completed block (``lookup_tail``).  ``matched`` is capped at
+        ``len(prompt) - 1`` so at least one prompt token always runs
+        through the model — the joiner's first sampled token needs
+        logits — which may leave the write cursor inside a shared block;
+        the COW fork at write time keeps that sound.
+        """
+        if not self.share_prefix:
+            return [], [], 0
+        bs = self.block_size
+        L = len(prompt)
+        parent = ROOT_DIGEST
+        mapped: List[int] = []
+        digests: List[bytes] = []
+        off = 0
+        while off + bs <= L:
+            toks = tuple(int(t) for t in prompt[off:off + bs])
+            block = self.allocator.lookup(parent, toks)
+            if block is None:
+                break
+            parent = chain_digest(parent, toks)
+            mapped.append(block)
+            digests.append(parent)
+            off += bs
+        if 2 <= L - off < bs:
+            # a 1-token tail is pure overhead: its only token would be
+            # re-run (and fork the block) anyway, so require >= 2
+            tail = self.allocator.lookup_tail(
+                parent, tuple(int(t) for t in prompt[off:L]))
+            if tail is not None:
+                mapped.append(tail)
+                off = L
+        matched = min(off, L - 1)
+        return mapped, digests[:matched // bs], matched
+
+    def _match_prefix_cached(self, req: _Request):
+        """Memoized match for a queued request.  Blocks only leave the
+        pool (or the content table) through release/register, each of
+        which bumps ``_pool_epoch`` — so while the epoch is unchanged a
+        cached match is still valid and a blocked queue head costs O(1)
+        per tick instead of re-hashing its whole prompt."""
+        if req.match is None or req.match_epoch != self._pool_epoch:
+            req.match = self._match_prefix(req.prompt)
+            req.match_epoch = self._pool_epoch
+        return req.match
 
     def _admit_paged(self) -> None:
         """Admit queued requests into free slots, FIFO.  A request needs
-        a slot plus a worst-case block reservation (prompt + max_new,
-        capped at capacity); the queue head blocks until it fits — the
-        request stays queued, decode continues, nothing crashes."""
+        a slot plus a worst-case *private*-block reservation: the pages
+        its matched prefix shares forever are discounted, everything
+        else (fresh prompt pages, decode extensions, one possible COW
+        fork of the tail page) is budgeted up front, so mid-decode
+        allocation never fails.  The queue head blocks until it fits —
+        the request stays queued, decode continues, nothing crashes."""
         free = [i for i, s in enumerate(self._slots) if s is None]
         mid_decode = self.n_active > 0
         joins = []
@@ -426,22 +614,38 @@ class ServeEngine:
             while free and self._pending:
                 req = self._pending[0]
                 plen = req.prompt.shape[0]
-                needed = self.allocator.blocks_for(
+                mapped, digests, matched = self._match_prefix_cached(req)
+                total = self.allocator.blocks_for(
                     min(plen + self.max_new_tokens, self.capacity))
+                # pages below matched // block_size are never written by
+                # this slot, so they stay shared for its whole lifetime
+                needed = total - matched // self.block_size
                 if needed > self.allocator.n_free - self._reserved:
                     break
                 self._pending.popleft()
-                n_prompt = self.allocator.blocks_for(plen)
-                blocks = self.allocator.alloc(n_prompt)
-                self._reserved += needed - n_prompt
-                joins.append((free.pop(0), req, blocks, needed - n_prompt))
-        for slot_i, req, blocks, reserve in joins:
+                n_fresh = self.allocator.blocks_for(plen) - len(mapped)
+                try:
+                    fresh = self.allocator.acquire(n_fresh)
+                except CacheFullError:   # unreachable given the check above
+                    self._pending.appendleft(req)
+                    break
+                self.allocator.share(mapped)
+                blocks = mapped + fresh
+                self._reserved += needed - n_fresh
+                joins.append((free.pop(0), req, blocks, needed - n_fresh,
+                              matched, digests))
+        for slot_i, req, blocks, reserve, matched, digests in joins:
             if mid_decode:
                 self.n_joins += 1
-            self._slots[slot_i] = _PagedSlot(req, blocks, reserve)
+            if matched:
+                self.n_prefix_hits += 1
+                self.n_shared_tokens += matched
+            self._slots[slot_i] = _PagedSlot(req, blocks, reserve,
+                                             prefill_off=matched,
+                                             digests=list(digests))
             self._page_table[slot_i, :] = 0
             self._page_table[slot_i, :len(blocks)] = blocks
-            self._lengths[slot_i] = 0
+            self._lengths[slot_i] = matched
 
     def _extend_blocks(self, slot_i: int, slot: _PagedSlot,
                        n_tokens: int) -> None:
@@ -450,11 +654,62 @@ class ServeEngine:
         need = -(-n_tokens // self.block_size)
         while len(slot.blocks) < need:
             assert slot.reserve_left > 0, "reservation under-counted"
-            (bid,) = self.allocator.alloc(1)
+            (bid,) = self.allocator.acquire(1)
             slot.blocks.append(bid)
             slot.reserve_left -= 1
             self._reserved -= 1
             self._page_table[slot_i, len(slot.blocks) - 1] = bid
+
+    def _cow_write_range(self, slot_i: int, slot: _PagedSlot, start: int,
+                         n_new: int) -> None:
+        """Copy-on-write: fork every *shared* block in the page range
+        the coming ``paged_scatter`` will touch, so the write can never
+        leak into another slot's view of the pool."""
+        bs = self.block_size
+        first = start // bs
+        last = (start + n_new - 1) // bs
+        for p in range(first, min(last + 1, len(slot.blocks))):
+            if self.allocator.ref(slot.blocks[p]) > 1:
+                self._fork_block(slot_i, slot, p)
+
+    def _fork_block(self, slot_i: int, slot: _PagedSlot, p: int) -> None:
+        """Give the slot a private copy of page ``p``: acquire a block
+        from the slot's reservation, copy the page's KV across every
+        layer, swap the page-table entry, and drop our reference to the
+        shared original (its other holders keep it alive)."""
+        old = slot.blocks[p]
+        assert slot.reserve_left > 0, "COW fork not covered by reservation"
+        (new,) = self.allocator.acquire(1)
+        slot.reserve_left -= 1
+        self._reserved -= 1
+        self._paged_cache = self._copy_block(self._paged_cache, old, new)
+        self.allocator.release([old])
+        self._pool_epoch += 1
+        slot.blocks[p] = new
+        self._page_table[slot_i, p] = new
+        self.n_cow_forks += 1
+
+    def _seq_tokens(self, slot: _PagedSlot, start: int,
+                    stop: int) -> Tuple[int, ...]:
+        """Tokens at cache positions [start, stop): prompt, then the
+        generated stream (token ``g`` was written at ``len(prompt)+g``)."""
+        L = len(slot.prompt)
+        return tuple(int(slot.prompt[p]) if p < L
+                     else int(slot.tokens[p - L])
+                     for p in range(start, stop))
+
+    def _register_full_pages(self, slot_i: int, slot: _PagedSlot) -> None:
+        """Publish every newly completed page to the content table so
+        later joiners can map it instead of re-prefilling."""
+        bs = self.block_size
+        length = int(self._lengths[slot_i])
+        while (len(slot.digests) + 1) * bs <= length:
+            p = len(slot.digests)
+            toks = self._seq_tokens(slot, p * bs, (p + 1) * bs)
+            parent = slot.digests[-1] if slot.digests else ROOT_DIGEST
+            self.allocator.register(slot.blocks[p], parent, toks)
+            slot.digests.append(chain_digest(parent, toks))
+            self._pool_epoch += 1
 
     def _evict_paged(self) -> List[GenerationResult]:
         out: List[GenerationResult] = []
@@ -466,7 +721,10 @@ class ServeEngine:
                 request_id=slot.rid, prompt=slot.prompt,
                 tokens=np.asarray(slot.tokens, np.int32),
                 latency_s=now - slot.t_submit))
-            self.allocator.free(slot.blocks)
+            # refcounted release: shared blocks stay resident (and
+            # content-addressable) as long as any other slot maps them
+            self.allocator.release(slot.blocks)
+            self._pool_epoch += 1
             self._reserved -= slot.reserve_left
             self._page_table[i, :] = 0
             self._lengths[i] = 0
@@ -502,3 +760,14 @@ class ServeEngine:
             idx[ax] = sel
             return old.at[tuple(idx)].set(new[tuple(idx)])
         return jax.tree.map(merge, live, fresh, self._batch_axes)
+
+
+def _generic_copy_paged_block(cache, src: int, dst: int):
+    """Fallback COW copy for models without ``copy_paged_block``: every
+    paged-cache leaf is a ``(num_blocks, block_size, ...)`` store,
+    optionally stacked under a leading scan-over-layers axis, so the
+    block axis is ``ndim - 4``."""
+    def cp(leaf):
+        idx = [slice(None)] * (leaf.ndim - 4)
+        return leaf.at[tuple(idx + [dst])].set(leaf[tuple(idx + [src])])
+    return jax.tree.map(cp, cache)

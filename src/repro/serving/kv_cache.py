@@ -1,4 +1,4 @@
-"""Block-paged KV cache: allocator + pure-jnp page table primitives.
+"""Block-paged KV cache: refcounted allocator + pure-jnp page primitives.
 
 The serving engine's dense cache gave every slot a contiguous
 ``(capacity, ...)`` strip, so admission cost one full-position prefill
@@ -6,11 +6,17 @@ and memory scaled as ``batch_size * capacity`` even when most slots
 held short sequences.  The paged layout (cf. vLLM / the PIE backend)
 instead carves one shared pool of ``num_blocks`` fixed-size blocks:
 
-  * ``BlockAllocator`` — host-side free list.  Slots allocate blocks
-    for their prompt at admission, extend one block at a time as decode
-    crosses a block boundary, and free everything on eviction.  A
-    request that does not fit raises ``CacheFullError`` (the engine
-    catches the *admission* case and leaves the request queued).
+  * ``BlockAllocator`` — host-side free list with **per-block
+    refcounts** and a **content-hash table** over full blocks.  Slots
+    ``acquire`` private blocks, ``share`` already-resident ones
+    (refcount + 1), and ``release`` everything on eviction; a block
+    returns to the free list only when its refcount reaches zero.  The
+    content table maps ``(parent chain digest, block tokens)`` to the
+    physical block holding that prefix's KV, which is what lets
+    ``ServeEngine`` map a joiner's common prompt prefix straight into
+    its page table instead of re-prefilling it.  Entries are removed
+    the moment their block is freed — a table hit always points at
+    live, valid KV.
   * ``paged_scatter`` / ``paged_gather`` — jit-friendly primitives
     mapping logical token positions to physical block rows through a
     per-slot page table.  They live with the attention math in
@@ -24,25 +30,44 @@ beyond a slot's true length are masked by the attention kernel, so
 stale pointers are harmless).  Logical position ``l`` of slot ``b``
 lives at flat row ``page_table[b, l // block_size] * block_size +
 l % block_size``.
+
+Content addressing uses *chain digests*: the key of block ``p`` in a
+sequence is ``sha256(digest(p-1) || tokens of page p)`` with a fixed
+root digest, so a match on page ``p`` certifies the entire token prefix
+``0 .. (p+1)*block_size`` — not just the page's own tokens.  Sharing a
+matched chain is therefore exact, never probabilistic-by-suffix.
 """
 from __future__ import annotations
 
 import collections
-from typing import Iterable, List
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from ..models.attention import paged_gather, paged_scatter  # noqa: F401
 
-__all__ = ["BlockAllocator", "CacheFullError", "paged_gather",
-           "paged_scatter"]
+__all__ = ["BlockAllocator", "CacheFullError", "ROOT_DIGEST",
+           "chain_digest", "paged_gather", "paged_scatter"]
+
+# Chain root: the digest "before" a sequence's first page.
+ROOT_DIGEST = hashlib.sha256(b"repro.kv_cache.root").digest()
+
+
+def chain_digest(parent: bytes, tokens: Sequence[int]) -> bytes:
+    """Digest of a token chain extended by one full page of tokens."""
+    h = hashlib.sha256(parent)
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
 
 
 class CacheFullError(RuntimeError):
-    """Raised by ``BlockAllocator.alloc`` when the pool cannot satisfy
+    """Raised by ``BlockAllocator.acquire`` when the pool cannot satisfy
     the request.  The allocator state is unchanged (all-or-nothing)."""
 
 
 class BlockAllocator:
-    """Free-list allocator over a pool of fixed-size KV blocks."""
+    """Refcounted free-list allocator with a full-block content table."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks < 1:
@@ -53,35 +78,137 @@ class BlockAllocator:
         self.block_size = int(block_size)
         # FIFO reuse keeps physical placement deterministic for tests
         self._free: collections.deque = collections.deque(range(num_blocks))
-        self._live: set = set()
+        self._ref: Dict[int, int] = {}
+        # content table: parent digest -> {page tokens -> block id}, plus
+        # the reverse index used to unregister a block the moment it dies
+        self._table: Dict[bytes, Dict[Tuple[int, ...], int]] = {}
+        self._key_of: Dict[int, Tuple[bytes, Tuple[int, ...]]] = {}
 
+    # -- occupancy ----------------------------------------------------------
     @property
     def n_free(self) -> int:
         return len(self._free)
 
     @property
     def n_live(self) -> int:
-        return len(self._live)
+        return len(self._ref)
+
+    @property
+    def n_shared(self) -> int:
+        """Live blocks referenced by more than one slot."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    @property
+    def n_table(self) -> int:
+        """Content-table entries (always <= n_live)."""
+        return len(self._key_of)
+
+    def ref(self, block: int) -> int:
+        """Current refcount of ``block`` (0 if free)."""
+        return self._ref.get(block, 0)
+
+    def registered_blocks(self) -> Set[int]:
+        """Blocks currently addressable through the content table."""
+        return set(self._key_of)
+
+    def stats(self) -> Dict[str, int]:
+        shared = self.n_shared
+        return {"num_blocks": self.num_blocks, "n_free": self.n_free,
+                "n_live": self.n_live, "n_shared": shared,
+                "n_private": self.n_live - shared, "n_table": self.n_table}
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold ``n_tokens`` (at least one)."""
         return max(1, -(-int(n_tokens) // self.block_size))
 
-    def alloc(self, n: int = 1) -> List[int]:
-        """Take ``n`` blocks off the free list (all-or-nothing)."""
+    # -- lifecycle ----------------------------------------------------------
+    def acquire(self, n: int = 1) -> List[int]:
+        """Take ``n`` private blocks (refcount 1) off the free list,
+        all-or-nothing."""
         if n < 0:
-            raise ValueError(f"cannot allocate {n} blocks")
+            raise ValueError(f"cannot acquire {n} blocks")
         if n > len(self._free):
             raise CacheFullError(
                 f"need {n} blocks, only {len(self._free)}/{self.num_blocks} free")
         out = [self._free.popleft() for _ in range(n)]
-        self._live.update(out)
+        for b in out:
+            self._ref[b] = 1
         return out
 
-    def free(self, blocks: Iterable[int]) -> None:
-        """Return blocks to the pool; double/foreign frees raise."""
+    def share(self, blocks: Iterable[int]) -> None:
+        """Add a reference to already-live blocks (prefix sharing)."""
+        blocks = list(blocks)
         for b in blocks:
-            if b not in self._live:
+            if b not in self._ref:
+                raise ValueError(f"cannot share free block {b}")
+        for b in blocks:
+            self._ref[b] += 1
+        return None
+
+    def release(self, blocks: Iterable[int]) -> None:
+        """Drop one reference per block; a block returns to the free
+        list (and leaves the content table) only at refcount zero.
+        Releasing a free/foreign block raises."""
+        for b in blocks:
+            r = self._ref.get(b, 0)
+            if r <= 0:
                 raise ValueError(f"block {b} is not allocated (double free?)")
-            self._live.remove(b)
-            self._free.append(b)
+            if r == 1:
+                del self._ref[b]
+                self._unregister(b)
+                self._free.append(b)
+            else:
+                self._ref[b] = r - 1
+
+    # -- content addressing -------------------------------------------------
+    def register(self, block: int, parent: bytes,
+                 tokens: Sequence[int]) -> None:
+        """Publish a *full* block as the KV of chain ``parent`` extended
+        by ``tokens``.  First writer wins: re-registering the same chain
+        (e.g. a COW fork re-completing a page) is a no-op, so a table
+        entry always points at the block that originally computed it."""
+        if block not in self._ref:
+            raise ValueError(f"cannot register free block {block}")
+        if len(tokens) != self.block_size:
+            raise ValueError(
+                f"only full blocks are addressable: got {len(tokens)} tokens, "
+                f"block_size={self.block_size}")
+        if block in self._key_of:
+            return
+        kids = self._table.setdefault(parent, {})
+        key = tuple(int(t) for t in tokens)
+        if key in kids:
+            return                      # identical content already resident
+        kids[key] = block
+        self._key_of[block] = (parent, key)
+
+    def lookup(self, parent: bytes,
+               tokens: Sequence[int]) -> Optional[int]:
+        """Block holding exactly chain ``parent`` + full page ``tokens``."""
+        return self._table.get(parent, {}).get(tuple(int(t) for t in tokens))
+
+    def lookup_tail(self, parent: bytes,
+                    prefix: Sequence[int]) -> Optional[int]:
+        """A resident full block whose page *starts with* ``prefix``
+        under chain ``parent`` — lets a joiner map its final partial
+        page onto another sequence's completed block (rows past the
+        joiner's length are masked by attention, so the stranger's
+        suffix in the same block is never read)."""
+        prefix = tuple(int(t) for t in prefix)
+        if not prefix or len(prefix) >= self.block_size:
+            return None
+        for key, block in self._table.get(parent, {}).items():
+            if key[:len(prefix)] == prefix:
+                return block
+        return None
+
+    def _unregister(self, block: int) -> None:
+        key = self._key_of.pop(block, None)
+        if key is None:
+            return
+        parent, tokens = key
+        kids = self._table.get(parent)
+        if kids is not None and kids.get(tokens) == block:
+            del kids[tokens]
+            if not kids:
+                del self._table[parent]

@@ -1,4 +1,13 @@
-"""Jit-able serving step functions (also used by the dry-run)."""
+"""Jit-able serving step functions (also used by the dry-run).
+
+Sampling is one shared primitive, ``sample_logits``: greedy argmax when
+``greedy`` (or ``temperature == 0``), otherwise temperature / top-k
+categorical sampling with a **per-row PRNG key** ``(B, 2) uint32``.
+Per-row keys are what make sampling reproducible across serving modes:
+the engine derives slot ``b``'s key from its request id and decode step
+only, so the same request draws the same tokens whether it is served by
+the dense or the block-paged engine, in whatever batch composition.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -15,13 +24,59 @@ def make_prefill_step(model, capacity: int, cache_dtype=jnp.bfloat16):
     return prefill_step
 
 
-def make_decode_step(model, *, greedy: bool = True, temperature: float = 1.0):
+def sample_logits(logits, rng=None, *, greedy: bool = True,
+                  temperature: float = 1.0, top_k: Optional[int] = None):
+    """logits (B, V), rng (B, 2) uint32 per-row keys -> tokens (B,) int32.
+
+    ``greedy`` or ``temperature == 0`` is exact argmax (no rng needed);
+    otherwise each row is drawn from ``softmax(logits / temperature)``
+    restricted to its ``top_k`` highest logits (ties at the k-th value
+    are kept).  Rows are sampled with *independent* keys so one row's
+    draw never depends on the batch around it.
+    """
+    if greedy or temperature == 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if rng is None:
+        raise ValueError("sampling (greedy=False, temperature>0) needs rng")
+    l = logits.astype(jnp.float32) / jnp.float32(temperature)
+    if top_k is not None and 0 < top_k < l.shape[-1]:
+        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    draw = lambda key, row: jax.random.categorical(key, row)
+    return jax.vmap(draw)(rng, l).astype(jnp.int32)
+
+
+def make_slot_sampler(seed: int = 0, *, greedy: bool = True,
+                      temperature: float = 1.0,
+                      top_k: Optional[int] = None):
+    """Jitted ``(logits, rids, steps) -> tokens`` used by the engine.
+
+    Row ``b``'s key — ``fold_in(fold_in(PRNGKey(seed), rids[b]),
+    steps[b])`` — is derived *inside* the jit, so the hot decode loop
+    ships two small int32 vectors instead of doing per-slot ``fold_in``
+    dispatches and device->host key syncs each token.  Both serving
+    modes draw through one of these, which is what makes paged and
+    dense token streams match for the same seed."""
+    if greedy:
+        return jax.jit(lambda logits, rids, steps:
+                       jnp.argmax(logits, axis=-1).astype(jnp.int32))
+    base = jax.random.PRNGKey(seed)
+
+    def sample(logits, rids, steps):
+        fold = lambda r, t: jax.random.fold_in(jax.random.fold_in(base, r), t)
+        keys = jax.vmap(fold)(rids, steps)
+        return sample_logits(logits, keys, greedy=False,
+                             temperature=temperature, top_k=top_k)
+    return jax.jit(sample)
+
+
+def make_decode_step(model, *, greedy: bool = True, temperature: float = 1.0,
+                     top_k: Optional[int] = None):
     def decode_step(params, cache, token, pos, rng=None):
-        """token: (B,1) -> (next_token (B,1), logits, cache)."""
+        """token: (B,1), rng: (B,2) per-row keys (ignored when greedy)
+        -> (next_token (B,1), logits, cache)."""
         logits, cache = model.decode_step(params, cache, token, pos)
-        if greedy:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            nxt = jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+        nxt = sample_logits(logits, rng, greedy=greedy,
+                            temperature=temperature, top_k=top_k)
         return nxt[:, None], logits, cache
     return decode_step

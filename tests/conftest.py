@@ -1,0 +1,21 @@
+"""Shared test configuration: fixed-seed hypothesis profiles.
+
+The tier-1 suite must pass with or without hypothesis installed (the
+property tests degrade to deterministic fallbacks).  When it *is*
+installed, ``HYPOTHESIS_PROFILE=ci`` selects a derandomized profile so
+the CI property job explores the same examples run-to-run — a failure
+there is a regression, never flake.
+"""
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:
+    pass
+else:
+    settings.register_profile("ci", max_examples=200, derandomize=True,
+                              deadline=None)
+    settings.register_profile("dev", max_examples=50, deadline=None)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:
+        settings.load_profile(_profile)

@@ -59,33 +59,90 @@ def _fresh_dense_tokens(model, params, prompt, max_new, capacity=64,
 
 # -- BlockAllocator -----------------------------------------------------------
 
-def test_allocator_alloc_free_roundtrip():
+def test_allocator_acquire_release_roundtrip():
     a = BlockAllocator(num_blocks=8, block_size=4)
-    got = a.alloc(3)
+    got = a.acquire(3)
     assert len(got) == len(set(got)) == 3
     assert a.n_free == 5 and a.n_live == 3
-    a.free(got)
+    assert all(a.ref(b) == 1 for b in got)
+    a.release(got)
     assert a.n_free == 8 and a.n_live == 0
 
 
 def test_allocator_full_is_all_or_nothing():
     a = BlockAllocator(num_blocks=4, block_size=2)
-    a.alloc(3)
+    a.acquire(3)
     before = a.n_free
     with pytest.raises(CacheFullError):
-        a.alloc(2)                     # only 1 free
+        a.acquire(2)                   # only 1 free
     assert a.n_free == before          # state untouched by the failure
-    assert len(a.alloc(1)) == 1        # the last block is still available
+    assert len(a.acquire(1)) == 1      # the last block is still available
 
 
-def test_allocator_double_free_raises():
+def test_allocator_double_release_raises():
     a = BlockAllocator(num_blocks=4, block_size=2)
-    (b,) = a.alloc(1)
-    a.free([b])
+    (b,) = a.acquire(1)
+    a.release([b])
     with pytest.raises(ValueError, match="double free"):
-        a.free([b])
+        a.release([b])
     with pytest.raises(ValueError):
-        a.free([99])                   # foreign block
+        a.release([99])                # foreign block
+
+
+def test_allocator_refcount_share_release():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    (b,) = a.acquire(1)
+    a.share([b])
+    a.share([b])
+    assert a.ref(b) == 3
+    assert a.n_shared == 1 and a.n_live == 1
+    a.release([b])
+    a.release([b])
+    assert a.ref(b) == 1 and a.n_shared == 0
+    assert a.n_free == 3               # still held by the last reference
+    a.release([b])
+    assert a.ref(b) == 0 and a.n_free == 4
+    with pytest.raises(ValueError, match="share free"):
+        a.share([b])                   # freed blocks cannot gain refs
+
+
+def test_allocator_content_table_roundtrip():
+    from repro.serving import ROOT_DIGEST, chain_digest
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    b0, b1 = a.acquire(2)
+    toks0, toks1 = (1, 2, 3, 4), (5, 6, 7, 8)
+    a.register(b0, ROOT_DIGEST, toks0)
+    d0 = chain_digest(ROOT_DIGEST, toks0)
+    a.register(b1, d0, toks1)
+    assert a.lookup(ROOT_DIGEST, toks0) == b0
+    assert a.lookup(d0, toks1) == b1
+    assert a.lookup(ROOT_DIGEST, toks1) is None   # chain position matters
+    # partial-tail match: a completed block whose page starts with the tail
+    assert a.lookup_tail(d0, (5, 6)) == b1
+    assert a.lookup_tail(d0, (5, 9)) is None
+    assert a.n_table == 2
+    # entries never outlive their block
+    a.release([b1])
+    assert a.lookup(d0, toks1) is None
+    assert a.registered_blocks() == {b0}
+    a.release([b0])
+    assert a.n_table == 0 and a.lookup(ROOT_DIGEST, toks0) is None
+
+
+def test_allocator_register_guards():
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    from repro.serving import ROOT_DIGEST
+    (b,) = a.acquire(1)
+    with pytest.raises(ValueError, match="full blocks"):
+        a.register(b, ROOT_DIGEST, (1, 2))       # partial page
+    with pytest.raises(ValueError, match="free block"):
+        a.register(3, ROOT_DIGEST, (1, 2, 3, 4))  # not allocated
+    # first writer wins: duplicate content does not steal the entry
+    (b2,) = a.acquire(1)
+    a.register(b, ROOT_DIGEST, (1, 2, 3, 4))
+    a.register(b2, ROOT_DIGEST, (1, 2, 3, 4))
+    assert a.lookup(ROOT_DIGEST, (1, 2, 3, 4)) == b
+    assert a.registered_blocks() == {b}
 
 
 def test_allocator_blocks_for():
@@ -96,34 +153,74 @@ def test_allocator_blocks_for():
 
 
 def _run_alloc_sequence(ops):
-    """Shared property body: ops is a list of (is_alloc, size_or_pick)."""
+    """Shared property body for acquire/share/register/release
+    interleavings.  ``ops`` is a list of (kind, x) with kind in 0..3:
+
+      0: acquire x blocks (x mod 4 + 1);
+      1: release a reference group picked by x;
+      2: share a group picked by x (refcount + 1, later released);
+      3: register a live block picked by x under a synthetic chain key.
+
+    Invariants after every op: refcounts mirror a host-side model; every
+    block is free xor live exactly once; a freed block is never
+    releasable again; content-table entries never outlive their block.
+    """
+    from repro.serving import ROOT_DIGEST
     a = BlockAllocator(num_blocks=12, block_size=4)
-    live = []                          # allocation groups
-    for is_alloc, x in ops:
-        if is_alloc:
+    groups = []                        # each: list of blocks, one ref apiece
+    refs: dict = {}                    # mirror refcounts
+    n_keys = 0
+    for kind, x in ops:
+        if kind == 0:
+            n = x % 4 + 1
             try:
-                got = a.alloc(x)
+                got = a.acquire(n)
             except CacheFullError:
-                assert x > a.n_free    # only legitimate overflow raises
+                assert n > a.n_free    # only legitimate overflow raises
                 continue
-            flat = [b for g in live for b in g]
-            assert not set(got) & set(flat), "double allocation"
-            live.append(got)
-        elif live:
-            a.free(live.pop(x % len(live)))
-        # conservation: every block is free xor live, exactly once
-        n_live = sum(len(g) for g in live)
-        assert a.n_free + n_live == a.num_blocks
-        assert a.n_live == n_live
-    for g in live:
-        a.free(g)
-    assert a.n_free == a.num_blocks
+            assert not set(got) & set(refs), "double allocation"
+            for b in got:
+                refs[b] = 1
+            groups.append(got)
+        elif kind == 1 and groups:
+            g = groups.pop(x % len(groups))
+            a.release(g)
+            for b in g:
+                refs[b] -= 1
+                if refs[b] == 0:
+                    del refs[b]
+        elif kind == 2 and groups:
+            g = list(groups[x % len(groups)])
+            a.share(g)
+            for b in g:
+                refs[b] += 1
+            groups.append(g)           # the extra refs get released too
+        elif kind == 3 and refs:
+            b = sorted(refs)[x % len(refs)]
+            n_keys += 1
+            a.register(b, ROOT_DIGEST,
+                       (n_keys,) * a.block_size)   # unique synthetic page
+        # conservation + refcount mirror + table liveness
+        assert a.n_free + len(refs) == a.num_blocks
+        assert a.n_live == len(refs)
+        for b, r in refs.items():
+            assert a.ref(b) == r
+        assert a.n_shared == sum(1 for r in refs.values() if r > 1)
+        assert a.registered_blocks() <= set(refs), \
+            "content-table entry outlived its block"
+    for g in groups:
+        a.release(g)
+    assert a.n_free == a.num_blocks and a.n_live == 0
+    assert a.n_table == 0
+    # fully drained: nothing is double-releasable
+    with pytest.raises(ValueError):
+        a.release([0])
 
 
 def test_allocator_random_sequences_deterministic():
     rng = np.random.default_rng(7)
     for _ in range(20):
-        ops = [(bool(rng.integers(0, 2)), int(rng.integers(0, 8)))
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 16)))
                for _ in range(60)]
         _run_alloc_sequence(ops)
 
@@ -132,9 +229,9 @@ if HAVE_HYPOTHESIS:
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=50, deadline=None)
-    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 15)),
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 15)),
                     max_size=80))
-    def test_allocator_property_no_double_alloc_conservation(ops):
+    def test_allocator_property_refcount_conservation(ops):
         _run_alloc_sequence(ops)
 
 
@@ -306,13 +403,157 @@ def test_paged_mode_autodetects_and_validates(tiny_model):
     eng = ServeEngine(NoPaged(), params={})
     assert not eng.paged               # dense fallback, no allocator
     assert eng.allocator is None
-    # sampling engines must keep working: auto mode falls back to dense
-    # (which knows categorical sampling) instead of raising
+    assert not eng.share_prefix        # sharing is a paged-mode feature
+    with pytest.raises(ValueError, match="share_prefix"):
+        ServeEngine(NoPaged(), params={}, share_prefix=True)
+    # sampling no longer forces the dense path: paged mode stays auto-on
     model, params = tiny_model
-    eng = ServeEngine(model, params, greedy=False)
-    assert not eng.paged
-    with pytest.raises(NotImplementedError, match="greedily"):
-        ServeEngine(model, params, greedy=False, paged=True)
+    eng = ServeEngine(model, params, greedy=False, temperature=0.7)
+    assert eng.paged
+    eng = ServeEngine(model, params, greedy=False, paged=True)
+    assert eng.paged and eng.share_prefix
+
+
+# -- prefix sharing + copy-on-write -------------------------------------------
+
+def _serve_staggered(model, params, prompts, *, share, max_new=4,
+                     block_size=4, prefill_chunk=16, batch_size=4):
+    """Serve ``prompts[0]`` until its prefill completes (its pages are
+    then registered), then submit the rest.  ``prefill_chunk`` covers
+    every prompt, so the sharing-on and sharing-off runs execute the
+    same sequence of jit shapes — any logit difference is semantic, not
+    scheduling.  Returns (engine, tokens by rid, per-step occupancy)."""
+    eng = ServeEngine(model, params, batch_size=batch_size, capacity=32,
+                      max_new_tokens=max_new, block_size=block_size,
+                      prefill_chunk=prefill_chunk, share_prefix=share,
+                      trace_logits=True)
+    assert eng.paged and eng.share_prefix == share
+    eng.submit(prompts[0])
+    while eng.n_prefills < 1:
+        eng.step()
+    for p in prompts[1:]:
+        eng.submit(p)
+    results, occupancy = [], []
+    while eng.has_work:
+        results += eng.step()
+        need = sum(-(-int(l) // block_size)
+                   for i, l in enumerate(eng._lengths)
+                   if eng._slots[i] is not None and l > 0)
+        occupancy.append((eng.n_active, eng.allocator.n_live, need))
+    return eng, {r.request_id: list(r.tokens) for r in results}, occupancy
+
+
+def test_prefix_sharing_bit_identical_and_fewer_blocks(tiny_model):
+    """The tentpole acceptance check: 4 requests sharing a 2-block
+    prefix produce logits *bit-identical* to the sharing-disabled run,
+    while strictly fewer blocks are live — occupancy drops below the
+    sum of per-slot page needs, which only sharing can achieve."""
+    model, params = tiny_model
+    rng = np.random.default_rng(21)
+    prefix = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate([prefix, np.asarray(s, np.int32)])
+               for s in ((60, 61), (58, 59), (56, 57), (54, 55))]
+    eng_off, toks_off, occ_off = _serve_staggered(model, params, prompts,
+                                                  share=False)
+    eng_on, toks_on, occ_on = _serve_staggered(model, params, prompts,
+                                               share=True)
+    assert toks_on == toks_off
+    assert set(eng_on.logit_trace) == set(eng_off.logit_trace) == {0, 1, 2, 3}
+    for rid, trace in eng_off.logit_trace.items():
+        assert len(eng_on.logit_trace[rid]) == len(trace)
+        for step, (a, b) in enumerate(zip(eng_on.logit_trace[rid], trace)):
+            assert np.array_equal(a, b), \
+                f"sharing changed logits of request {rid} at step {step}"
+    # the prefix was actually shared, not re-prefilled
+    assert eng_on.n_prefix_hits == 3
+    assert eng_on.n_shared_tokens == 3 * len(prefix)
+    assert eng_off.n_prefix_hits == 0
+    # pool occupancy: strictly fewer live blocks at full residency, and
+    # below the sum of per-slot page needs (impossible without sharing)
+    peak_on = max(l for _, l, _ in occ_on)
+    peak_off = max(l for _, l, _ in occ_off)
+    assert peak_on < peak_off
+    assert any(live < need for active, live, need in occ_on if active == 4)
+    assert all(live >= need for _, live, need in occ_off)
+    # everything drains: refcounts, reservations, content table
+    for eng in (eng_on, eng_off):
+        assert eng.allocator.n_free == eng.allocator.num_blocks
+        assert eng.allocator.n_table == 0 and eng._reserved == 0
+
+
+def test_cow_fork_isolates_identical_prompts(tiny_model):
+    """A joiner whose whole (block-aligned) prompt is resident maps
+    every page; re-running its last token then writes into a shared
+    block, which must be forked — not corrupted in place — so both the
+    original and the joiner still decode the oracle sequence."""
+    model, params = tiny_model
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)  # 2 blocks
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=6, block_size=4, prefill_chunk=16)
+    eng.submit(prompt)
+    while eng.n_prefills < 1:
+        eng.step()
+    eng.submit(prompt.copy())          # identical prompt, still resident
+    results = []
+    while eng.has_work:
+        results += eng.step()
+    assert eng.n_prefix_hits == 1
+    assert eng.n_shared_tokens == 7    # capped at len(prompt) - 1
+    assert eng.n_cow_forks >= 1        # the write into the shared tail forked
+    oracle = _fresh_dense_tokens(model, params, prompt, 6)
+    by_id = {r.request_id: list(r.tokens) for r in results}
+    assert by_id[0] == oracle          # original unharmed by the fork
+    assert by_id[1] == oracle          # joiner decodes the same sequence
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def test_tail_block_sharing_maps_partial_page(tiny_model):
+    """A joiner's final *partial* page can land on another sequence's
+    completed block (rows past the joiner's length are masked), covering
+    prompt tokens that extend into the original's generated stream."""
+    model, params = tiny_model
+    rng = np.random.default_rng(41)
+    p1 = rng.integers(1, TINY.vocab_size, 10).astype(np.int32)
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=6, block_size=4, prefill_chunk=16)
+    eng.submit(p1)
+    while int(eng._lengths[0]) < 12:   # page 2 (positions 8..11) complete
+        eng.step()
+    oracle1 = _fresh_dense_tokens(model, params, p1, 6)
+    # 11-token prompt: pages 0/1 match by chain, tail (p1[8:], oracle1[0])
+    # matches the first 3 rows of the original's completed page 2
+    p2 = np.concatenate([p1, np.asarray(oracle1[:1], np.int32)])
+    eng.submit(p2)
+    results = []
+    while eng.has_work:
+        results += eng.step()
+    assert eng.n_prefix_hits == 1
+    assert eng.n_shared_tokens == 10   # 8 full-page + 2 tail (one re-run)
+    assert eng.n_cow_forks >= 1        # tail page forked before the write
+    by_id = {r.request_id: list(r.tokens) for r in results}
+    assert by_id[0] == oracle1
+    assert by_id[1] == _fresh_dense_tokens(model, params, p2, 6)
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def test_no_sharing_between_disjoint_prompts(tiny_model):
+    """Different prompts must never map each other's blocks."""
+    model, params = tiny_model
+    rng = np.random.default_rng(51)
+    a = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)
+    b = (a + 1) % TINY.vocab_size      # differs at every position
+    b[b == 0] = 1
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4, prefill_chunk=16)
+    eng.submit(a)
+    while eng.n_prefills < 1:
+        eng.step()
+    eng.submit(b)
+    while eng.has_work:
+        eng.step()
+    assert eng.n_prefix_hits == 0 and eng.n_cow_forks == 0
+    assert eng.allocator.n_free == eng.allocator.num_blocks
 
 
 # -- paged decode-attention kernel vs oracle ----------------------------------

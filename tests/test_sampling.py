@@ -1,0 +1,144 @@
+"""Seeded sampling across serving modes.
+
+The engine derives slot ``b``'s key for its ``t``-th token as
+``fold_in(fold_in(PRNGKey(seed), request_id), t)`` and draws through one
+shared jitted sampler, so the token stream is a function of
+``(seed, request, step)`` only — not of serving mode, batch composition,
+or join timing.  These tests pin that contract:
+
+  * paged seeded sampling == dense seeded sampling, token for token;
+  * ``temperature=0`` is exactly the greedy path (no rng involved);
+  * same seed reproduces, different seeds diverge;
+  * the ``sample_logits`` primitive respects top-k / temperature.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.serving import ServeEngine, sample_logits
+
+TINY = ModelConfig(
+    arch_id="tiny-sampling", family="dense", n_layers=2, d_model=32,
+    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+    norm="rmsnorm", mlp_act="swiglu", rope="rope",
+    param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n=4, length=6, seed=2):
+    # equal lengths: the dense engine then prefills one un-padded wave,
+    # so both modes decode at identical true positions
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, TINY.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _serve_tokens(model, params, prompts, **kw):
+    kw.setdefault("batch_size", len(prompts))
+    kw.setdefault("capacity", 32)
+    kw.setdefault("max_new_tokens", 6)
+    eng = ServeEngine(model, params, **kw)
+    res = eng.serve([p.copy() for p in prompts])
+    assert [r.request_id for r in res] == list(range(len(prompts)))
+    return eng, [list(r.tokens) for r in res]
+
+
+def test_paged_sampling_matches_dense_seeded(tiny_model):
+    model, params = tiny_model
+    prompts = _prompts()
+    # temperature > 0 alone selects sampling — no greedy=False needed
+    cfg = dict(temperature=0.8, top_k=16, seed=11)
+    eng_d, toks_d = _serve_tokens(model, params, prompts, paged=False, **cfg)
+    eng_p, toks_p = _serve_tokens(model, params, prompts, paged=True,
+                                  block_size=4, prefill_chunk=8, **cfg)
+    assert not eng_d.paged and eng_p.paged
+    assert toks_d == toks_p
+    # and actually sampled: a greedy run disagrees somewhere
+    _, toks_g = _serve_tokens(model, params, prompts, paged=True,
+                              block_size=4, prefill_chunk=8)
+    assert toks_p != toks_g
+
+
+def test_sampling_survives_mid_decode_join(tiny_model):
+    """Join timing must not shift a request's sample stream: the key is
+    a function of (request, step), not of when the slot was admitted."""
+    model, params = tiny_model
+    prompts = _prompts(n=3, length=6, seed=5)
+    cfg = dict(greedy=False, temperature=0.9, top_k=None, seed=3,
+               paged=True, block_size=4, prefill_chunk=8)
+    # batch_size 4: all three run together, no queueing
+    _, together = _serve_tokens(model, params, prompts, batch_size=4, **cfg)
+    # batch_size 1: strictly sequential — same per-request streams
+    eng, seq = _serve_tokens(model, params, prompts, batch_size=1, **cfg)
+    assert eng.n_requests == 3
+    assert seq == together
+
+
+def test_temperature_zero_reduces_to_greedy(tiny_model):
+    model, params = tiny_model
+    prompts = _prompts(seed=7)
+    for paged in (False, True):
+        _, greedy = _serve_tokens(model, params, prompts, paged=paged)
+        eng, t0 = _serve_tokens(model, params, prompts, paged=paged,
+                                greedy=False, temperature=0.0, seed=9)
+        assert eng._greedy           # temperature 0 selects the greedy path
+        assert t0 == greedy
+    # paged default (auto) serves sampling engines too now
+    eng = ServeEngine(model, params, greedy=False, temperature=0.5)
+    assert eng.paged
+
+
+def test_seeded_sampling_reproducible_and_seed_sensitive(tiny_model):
+    model, params = tiny_model
+    prompts = _prompts(seed=13)
+    cfg = dict(paged=True, block_size=4, prefill_chunk=8, greedy=False,
+               temperature=1.2, max_new_tokens=8)
+    _, a = _serve_tokens(model, params, prompts, seed=17, **cfg)
+    _, b = _serve_tokens(model, params, prompts, seed=17, **cfg)
+    _, c = _serve_tokens(model, params, prompts, seed=18, **cfg)
+    assert a == b                    # reruns are bit-reproducible
+    assert a != c                    # the seed actually feeds the draw
+
+
+def test_sample_logits_primitive():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((5, 32)), jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(5)])
+    argmax = np.asarray(jnp.argmax(logits, axis=-1))
+    # greedy and temperature=0 are exact argmax, with or without keys
+    assert np.array_equal(sample_logits(logits), argmax)
+    assert np.array_equal(
+        sample_logits(logits, keys, greedy=False, temperature=0.0), argmax)
+    # top_k=1 degenerates to argmax whatever the key
+    assert np.array_equal(
+        sample_logits(logits, keys, greedy=False, temperature=0.7, top_k=1),
+        argmax)
+    # top_k=k never samples outside each row's top-k set
+    k = 4
+    topk = np.asarray(jax.lax.top_k(logits, k)[1])
+    for i in range(20):
+        keys_i = jnp.stack([jax.random.PRNGKey(100 * i + j)
+                            for j in range(5)])
+        draw = np.asarray(sample_logits(logits, keys_i, greedy=False,
+                                        temperature=1.0, top_k=k))
+        for row in range(5):
+            assert draw[row] in topk[row]
+    # sampling without a key is an error, not silent greediness
+    with pytest.raises(ValueError, match="rng"):
+        sample_logits(logits, None, greedy=False, temperature=1.0)
+
+
+def test_engine_rejects_bad_sampling_config(tiny_model):
+    model, params = tiny_model
+    with pytest.raises(ValueError, match="temperature"):
+        ServeEngine(model, params, temperature=-0.5)
+    with pytest.raises(ValueError, match="top_k"):
+        ServeEngine(model, params, top_k=0)
