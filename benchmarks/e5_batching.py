@@ -95,31 +95,25 @@ def bench_bucket_recompiles() -> List[str]:
             f"compilations_for_sizes_1..8 (max log2(8)+1=4);{per_bucket}"]
 
 
-def bench_join_latency() -> List[str]:
-    """Mid-decode join cost, dense vs paged KV cache.
-
-    Dense continuous batching admits a joiner with one prefill at the
-    batch's *current position* — cost (and a fresh jit shape) grows with
-    how long the batch has been decoding.  The paged engine consumes the
-    joiner's prompt in fixed ``prefill_chunk``-token steps batched with
-    ongoing decode, so join cost is independent of the batch position.
-    Both sides are measured on warmed jit calls (compile excluded); the
-    paged call also carries one decode step for the in-flight slot, so
-    the comparison is conservative.
+def _bench_join_positions(cfg, prefix: str, dense_note: str,
+                          paged_note: str) -> List[str]:
+    """Shared protocol for the join-latency benches: dense join cost
+    (one prefill at the batch position) vs paged join cost (fixed
+    ``prefill_chunk``-token steps batched with ongoing decode), measured
+    at increasing batch positions.  Both sides are measured on warmed
+    jit calls (compile excluded); the paged call also carries one decode
+    step for the in-flight slot, so the comparison is conservative.
+    Asserts the paged side wins at the largest position and stays flat
+    in position.
     """
     import jax
     import jax.numpy as jnp
     from repro.models import build_model
-    from repro.models.config import ModelConfig
     from repro.serving import ServeEngine
 
-    cfg = ModelConfig(
-        arch_id="e5-tiny", family="dense", n_layers=2, d_model=64,
-        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
-        norm="rmsnorm", mlp_act="swiglu", rope="rope",
-        param_dtype="float32", compute_dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    recurrent = getattr(model, "has_recurrent_state", lambda: False)()
     positions = (64, 128, 256)
     cap, chunk, join_len, reps = 320, 8, 8, 5
 
@@ -139,41 +133,64 @@ def bench_join_latency() -> List[str]:
     for p in positions:
         batch = jnp.zeros((2, p), jnp.int32)
         dense_ms[p] = med(lambda: eng_d._prefill(params, batch, None))
-        rows.append(f"e5_join_dense_p{p},{dense_ms[p] * 1e3:.1f},"
-                    f"join=prefill_at_pos_{p};{dense_ms[p]:.2f}ms")
+        rows.append(f"{prefix}_dense_p{p},{dense_ms[p] * 1e3:.1f},"
+                    f"join={dense_note}_{p};{dense_ms[p]:.2f}ms")
 
     eng_p = ServeEngine(model, params, batch_size=2, capacity=cap,
                         max_new_tokens=8, block_size=16, prefill_chunk=chunk)
     assert eng_p.paged
+    assert (eng_p.state_store is not None) == recurrent
     P = eng_p._pages_per_slot
     # jit WITHOUT donation: the engine's donating _paged_fn would eat the
     # cache buffer on the warm-up call; here the same cache is re-fed
     paged_fn = jax.jit(model.paged_step)
+    kw = {"num_state_slots": 2} if recurrent else {}
     cache = model.init_paged_cache(eng_p.allocator.num_blocks,
-                                   eng_p.block_size, dtype=jnp.float32)
+                                   eng_p.block_size, dtype=jnp.float32, **kw)
     pt = jnp.asarray(np.arange(2 * P, dtype=np.int32).reshape(2, P))
     tokens = jnp.asarray(
         np.random.default_rng(0).integers(1, cfg.vocab_size,
                                           (2, chunk)).astype(np.int32))
     t_valid = jnp.asarray([1, chunk], jnp.int32)  # decode + prefill chunk
+    slots = jnp.asarray([0, 1], jnp.int32)
     for p in positions:
         lengths = jnp.asarray([p, 0], jnp.int32)
         n_chunks = -(-join_len // chunk)
         ms = med(lambda: paged_fn(params, cache, tokens, pt,
-                                  lengths, t_valid)[0]) * n_chunks
+                                  lengths, t_valid, slots)[0]) * n_chunks
         paged_ms[p] = ms
-        rows.append(f"e5_join_paged_p{p},{ms * 1e3:.1f},"
-                    f"join={n_chunks}x{chunk}tok_chunks;{ms:.2f}ms")
+        rows.append(f"{prefix}_paged_p{p},{ms * 1e3:.1f},"
+                    f"join={n_chunks}x{chunk}tok_chunks{paged_note}"
+                    f";{ms:.2f}ms")
 
     pmax, pmin = positions[-1], positions[0]
     flat = paged_ms[pmax] / paged_ms[pmin]
     gain = dense_ms[pmax] / paged_ms[pmax]
-    rows.append(f"e5_join_summary,{gain:.2f},"
+    rows.append(f"{prefix}_summary,{gain:.2f},"
                 f"dense/paged_at_pos{pmax}=x{gain:.2f};"
                 f"paged_pos_spread=x{flat:.2f}")
     assert gain > 1.5, f"paged join only x{gain:.2f} faster at pos {pmax}"
     assert flat < 2.5, f"paged join cost grew x{flat:.2f} with position"
     return rows
+
+
+def bench_join_latency() -> List[str]:
+    """Mid-decode join cost, dense vs paged KV cache.
+
+    Dense continuous batching admits a joiner with one prefill at the
+    batch's *current position* — cost (and a fresh jit shape) grows with
+    how long the batch has been decoding.  The paged engine consumes the
+    joiner's prompt in fixed ``prefill_chunk``-token steps batched with
+    ongoing decode, so join cost is independent of the batch position.
+    """
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        arch_id="e5-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+        norm="rmsnorm", mlp_act="swiglu", rope="rope",
+        param_dtype="float32", compute_dtype="float32")
+    return _bench_join_positions(cfg, "e5_join", "prefill_at_pos", "")
 
 
 def bench_prefix_share() -> List[str]:
@@ -248,10 +265,37 @@ def bench_prefix_share() -> List[str]:
     ]
 
 
+def bench_recurrent_join() -> List[str]:
+    """Mid-decode join cost for a *recurrent* (mamba) stack through the
+    paged engine's state slabs.
+
+    Before per-slot recurrent state, mamba/xlstm families fell back to
+    the dense engine, where admitting a joiner costs one prefill at the
+    batch's current position — for a recurrence that means re-scanning
+    `position` tokens, so join cost grows linearly with how long the
+    batch has been decoding.  The paged engine consumes the joiner's
+    prompt in fixed ``prefill_chunk``-token steps that carry the slot's
+    state slab forward, batched with ongoing decode — join cost is
+    position-independent.
+    """
+    from repro.models.config import ModelConfig, SSMConfig
+
+    cfg = ModelConfig(
+        arch_id="e5-tiny-mamba", family="hybrid", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+        norm="rmsnorm", mlp_act="swiglu", rope="rope",
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+        attn_layer_period=1, attn_layer_offset=1,   # pure-mamba stack
+        param_dtype="float32", compute_dtype="float32")
+    return _bench_join_positions(cfg, "e5_rjoin", "recurrence_rescan_at_pos",
+                                 "_state_slab")
+
+
 def run() -> List[str]:
     rows = []
     rows += bench_throughput_vs_batch()
     rows += bench_bucket_recompiles()
     rows += bench_join_latency()
     rows += bench_prefix_share()
+    rows += bench_recurrent_join()
     return rows

@@ -20,12 +20,41 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..models import build_model
+from ..models.config import ModelConfig, SSMConfig
 from ..serving import ServeEngine
+
+# demo-scale config per serving family (mirrors the conformance matrix
+# in tests/conftest.py): --family serves any of them through the same
+# paged engine — attention layers page, recurrent layers use state slabs
+_FAM_BASE = ModelConfig(
+    arch_id="fam-demo", family="dense", n_layers=4, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+    norm="rmsnorm", mlp_act="swiglu", rope="rope",
+    param_dtype="float32", compute_dtype="float32")
+_FAM_SSM = SSMConfig(d_state=16, d_conv=4, expand=2)
+FAMILY_CONFIGS = {
+    "transformer": _FAM_BASE,
+    "mamba": _FAM_BASE.replace(arch_id="fam-mamba", family="hybrid",
+                               ssm=_FAM_SSM, attn_layer_period=1,
+                               attn_layer_offset=1),
+    "xlstm": _FAM_BASE.replace(arch_id="fam-xlstm", family="ssm", d_ff=0,
+                               n_kv_heads=4, rope="none",
+                               ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                             slstm_every=2)),
+    "hybrid": _FAM_BASE.replace(arch_id="fam-hybrid", family="hybrid",
+                                ssm=_FAM_SSM, attn_layer_period=2,
+                                attn_layer_offset=0),
+}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-360m")
+    ap.add_argument("--family", choices=["arch"] + sorted(FAMILY_CONFIGS),
+                    default="arch",
+                    help="serve a demo model of this family (transformer/"
+                         "mamba/xlstm/hybrid) instead of --arch; recurrent "
+                         "families run paged via per-slot state slabs")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
@@ -60,9 +89,16 @@ def main():
     ap.add_argument("--shared-prompt", type=int, default=0,
                     help="give every request this many identical leading "
                          "prompt tokens (exercises prefix sharing)")
+    ap.add_argument("--num-state-slots", type=int, default=None,
+                    help="recurrent families: state slabs in the pool "
+                         "(default: one per batch slot; fewer gates "
+                         "admission like a small block pool)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.family != "arch":
+        cfg = FAMILY_CONFIGS[args.family]
+    else:
+        cfg = get_config(args.arch, smoke=args.smoke)
     if args.smoke:
         cfg = cfg.replace(param_dtype="float32", compute_dtype="float32")
     model = build_model(cfg)
@@ -76,6 +112,7 @@ def main():
                          num_blocks=args.num_blocks,
                          prefill_chunk=args.prefill_chunk,
                          share_prefix=tri[args.share_prefix],
+                         num_state_slots=args.num_state_slots,
                          temperature=args.temperature,
                          top_k=args.top_k, seed=args.seed)
 
@@ -134,6 +171,10 @@ def main():
         print(f"paged cache: {a.num_blocks} blocks x {a.block_size} tokens, "
               f"{s['n_free']} free / {s['n_shared']} shared / "
               f"{s['n_private']} private after drain")
+        if engine.state_store is not None:
+            print(f"state store: {s['num_state_slots']} slabs, "
+                  f"{s['n_state_free']} free / {s['n_state_live']} live "
+                  "after drain (recurrent layers)")
         if engine.share_prefix:
             print(f"prefix sharing: {engine.n_prefix_hits} hits, "
                   f"{engine.n_shared_tokens} prompt tokens served from "

@@ -9,6 +9,11 @@ parallel intra-chunk compute — bigger matmuls for the MXU, shorter scan
 State for decode: conv ring (B, d_conv-1, d_inner) + ssm state
 (B, d_inner, d_state): constant memory per token — why Jamba runs
 long_500k natively.
+
+Serving entry points share one per-token step (``_ssm_step`` /
+``_conv_taps``): ``mamba_decode`` is the T=1 case of
+``mamba_paged_step``, so the block-paged engine's single-token step is
+*bitwise* the dense decode step — the conformance suite relies on it.
 """
 from __future__ import annotations
 
@@ -39,13 +44,25 @@ def mamba_params(key, cfg: ModelConfig, dtype):
     }
 
 
+def _conv_taps(xp, w, b, T):
+    """Depthwise causal conv over a left-extended input.
+
+    xp: (B, dc-1+T, di) — the dc-1 tokens of history followed by the T
+    new tokens; w: (dc, di).  Returns (B, T, di).  The unrolled tap sum
+    (dc is 4) avoids conv layout shuffles on TPU, and — because prefill,
+    dense decode, and the paged step all add taps in this exact order —
+    keeps the three paths bitwise consistent per token.
+    """
+    dc = w.shape[0]
+    out = sum(xp[:, i: i + T, :] * w[i][None, None, :] for i in range(dc))
+    return out + b[None, None, :]
+
+
 def _causal_conv(x, w, b):
-    """Depthwise causal conv.  x: (B,S,di); w: (dc,di)."""
+    """Depthwise causal conv from zero history.  x: (B,S,di); w: (dc,di)."""
     dc = w.shape[0]
     xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
-    # unrolled taps (dc is 4): avoids conv layout shuffles on TPU
-    out = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(dc))
-    return out + b[None, None, :]
+    return _conv_taps(xp, w, b, x.shape[1])
 
 
 def _ssm_inputs(p, cfg: ModelConfig, xs):
@@ -55,6 +72,20 @@ def _ssm_inputs(p, cfg: ModelConfig, xs):
     dt_in, Bc, Cc = jnp.split(proj, [dtr, dtr + N], axis=-1)
     dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])
     return dt, Bc, Cc
+
+
+def _ssm_step(h, dt_t, x_t, b_t, c_t, A):
+    """One float32 recurrence step: h' = exp(dt A) h + dt B x; y = C h'.
+
+    Shared verbatim by ``selective_scan``, ``mamba_decode``, and
+    ``mamba_paged_step`` so every serving path advances the state with
+    bitwise-identical arithmetic.
+    """
+    decay = jnp.exp(dt_t[..., None] * A[None])       # (B,di,N)
+    drive = (dt_t * x_t)[..., None] * b_t[:, None, :]
+    h = decay * h + drive
+    y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+    return h, y_t
 
 
 def selective_scan(dt, Bc, Cc, xs, A, D, h0=None, *, use_kernel: bool = False,
@@ -101,12 +132,7 @@ def selective_scan(dt, Bc, Cc, xs, A, D, h0=None, *, use_kernel: bool = False,
         dt_c, x_c, b_c, c_c = xs_
 
         def step(h, t_):
-            dt_t, x_t, b_t, c_t = t_
-            decay = jnp.exp(dt_t[..., None] * A[None])       # (B,di,N)
-            drive = (dt_t * x_t)[..., None] * b_t[:, None, :]
-            h = decay * h + drive
-            y_t = jnp.einsum("bdn,bn->bd", h, c_t)
-            return h, y_t
+            return _ssm_step(h, *t_, A)
 
         h, y_c = jax.lax.scan(
             step, h, (jnp.moveaxis(dt_c, 1, 0), jnp.moveaxis(x_c, 1, 0),
@@ -150,23 +176,54 @@ def mamba_forward(p, cfg: ModelConfig, x, *, use_kernel: bool = False,
     return y @ p["out_proj"], (conv_tail, h_last)
 
 
-def mamba_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
-    """One token.  x: (B,1,d); conv_state: (B,dc-1,di); ssm_state: (B,di,N)."""
+def mamba_paged_step(p, cfg: ModelConfig, x, conv_state, ssm_state, t_valid):
+    """Advance each row by up to T tokens from carried per-row state.
+
+    x: (B,T,d); conv_state: (B,dc-1,di); ssm_state: (B,di,N); t_valid:
+    (B,) int32 — row ``b`` consumes only its first ``t_valid[b]``
+    tokens: its state stops advancing there and outputs past it are
+    garbage the caller must ignore.  One function covers block-paged
+    decode (T=1) and chunked prefill (T=chunk) for the serving engine;
+    per-token arithmetic is ``_conv_taps``/``_ssm_step``, the same ops
+    in the same order as ``mamba_forward``'s scan, so a chunked prefill
+    replays the dense prefill recurrence exactly.
+    """
     di, dc = cfg.d_inner, cfg.ssm.d_conv
+    B, T, _ = x.shape
     xz = x @ p["in_proj"]
-    xs, z = jnp.split(xz, 2, axis=-1)                             # (B,1,di)
-    window = jnp.concatenate([conv_state, xs], axis=1)            # (B,dc,di)
-    new_conv_state = window[:, 1:, :]
-    xs = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1, keepdims=True)
-                     + p["conv_b"][None, None])
+    xs, z = jnp.split(xz, 2, axis=-1)                             # (B,T,di)
+    xp = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+    # next conv window: the dc-1 inputs ending at each row's own valid
+    # length (stream position t_valid-1 lives at xp index t_valid+dc-2)
+    idx = t_valid[:, None] + jnp.arange(dc - 1, dtype=jnp.int32)[None, :]
+    new_conv_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    xs = jax.nn.silu(_conv_taps(xp, p["conv_w"], p["conv_b"], T))
     dt, Bc, Cc = _ssm_inputs(p, cfg, xs)
     A = -jnp.exp(p["A_log"])
-    dt32 = dt[:, 0].astype(jnp.float32)                           # (B,di)
-    decay = jnp.exp(dt32[..., None] * A[None])                    # (B,di,N)
-    drive = (dt32 * xs[:, 0].astype(jnp.float32))[..., None] * \
-        Bc[:, 0].astype(jnp.float32)[:, None, :]
-    h = decay * ssm_state + drive
-    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
-    y = y + p["D"][None] * xs[:, 0].astype(jnp.float32)
-    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None, :]
-    return y @ p["out_proj"], (new_conv_state, h)
+    seq = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(xs.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Bc.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Cc.astype(jnp.float32), 1, 0),
+           jnp.arange(T, dtype=jnp.int32))
+
+    def step(h, t_):
+        dt_t, x_t, b_t, c_t, t = t_
+        h_new, y_t = _ssm_step(h, dt_t, x_t, b_t, c_t, A)
+        h = jnp.where((t < t_valid)[:, None, None], h_new, h)
+        return h, y_t
+
+    h_last, ys = jax.lax.scan(step, ssm_state, seq)
+    y = jnp.moveaxis(ys, 0, 1)                                    # (B,T,di)
+    y = y + p["D"][None, None] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_conv_state, h_last)
+
+
+def mamba_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One token.  x: (B,1,d); conv_state: (B,dc-1,di); ssm_state: (B,di,N).
+
+    The T=1 case of ``mamba_paged_step`` — sharing the implementation is
+    what makes the paged engine's decode bitwise equal to the dense one.
+    """
+    ones = jnp.ones((x.shape[0],), jnp.int32)
+    return mamba_paged_step(p, cfg, x, conv_state, ssm_state, ones)

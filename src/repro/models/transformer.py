@@ -257,21 +257,61 @@ def _decode_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, pos, *,
     return x, state
 
 
-def _paged_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, page_table,
-                    lengths, t_valid):
-    """Multi-token step through a block-paged cache (attn blocks only).
+RECURRENT_BLOCKS = ("mamba", "mlstm", "slstm")
 
-    Mirrors ``_decode_sublayer`` exactly (norm/residual/constrain order)
-    so a T=1 paged step is numerically identical to a dense decode step
-    on the same cache content.
+
+def _paged_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, page_table,
+                    lengths, t_valid, state_slots):
+    """Multi-token step through the paged serving cache.
+
+    Attention blocks read/write the shared block pool through the page
+    table; recurrent blocks (mamba/mlstm/slstm) read/write their rows of
+    the per-slot **state slabs**: gather by ``state_slots``, zero rows
+    whose sequence starts this step (``lengths == 0`` — a slab recycled
+    from an evicted request must never leak state into its successor),
+    advance by up to ``t_valid`` tokens, scatter back (idle rows are
+    dropped, so a stale slab id on an evicted slot cannot clobber the
+    slab's new owner).  Mirrors ``_decode_sublayer`` exactly
+    (norm/residual/constrain order) so a T=1 paged step is numerically
+    identical to a dense decode step on the same cache content.
     """
     block, mlp = desc
-    assert block == "attn", block
     _, norm = make_norm(cfg.norm)
     h = norm(p["norm1"], x)
-    y, k, v = A.gqa_paged_step(p["attn"], cfg, h, state["k"], state["v"],
-                               page_table, lengths, t_valid)
-    state = {"k": k, "v": v}
+    if block == "attn":
+        y, k, v = A.gqa_paged_step(p["attn"], cfg, h, state["k"], state["v"],
+                                   page_table, lengths, t_valid)
+        state = {"k": k, "v": v}
+    else:
+        ns = jax.tree.leaves(state)[0].shape[0]
+        gathered = jax.tree.map(
+            lambda a: a[jnp.clip(state_slots, 0, ns - 1)], state)
+        fresh = lengths == 0
+
+        def blank(a):
+            return jnp.where(fresh.reshape((-1,) + (1,) * (a.ndim - 1)),
+                             jnp.zeros_like(a), a)
+
+        st = jax.tree.map(blank, gathered)
+        if block == "mamba":
+            y, (conv, ssm) = M.mamba_paged_step(
+                p["mamba"], cfg, h, st["conv"], st["ssm"], t_valid)
+            new = {"conv": conv, "ssm": ssm}
+        elif block == "mlstm":
+            y, (C, n, m) = X.mlstm_paged_step(
+                p["mlstm"], cfg, h, (st["C"], st["n"], st["m"]), t_valid)
+            new = {"C": C, "n": n, "m": m}
+        elif block == "slstm":
+            y, (hh, cc, nn, mm) = X.slstm_paged_step(
+                p["slstm"], cfg, h,
+                (st["h"], st["cs"], st["ns"], st["ms"]), t_valid)
+            new = {"h": hh, "cs": cc, "ns": nn, "ms": mm}
+        else:
+            raise ValueError(block)
+        idx = jnp.where(t_valid > 0, state_slots, ns)   # idle rows: OOB, drop
+        state = jax.tree.map(
+            lambda a, b: a.at[idx].set(b.astype(a.dtype), mode="drop"),
+            state, new)
     x = x + y
     x = constrain(x, ("pod", "data"), None, None)
     if mlp != "none":
@@ -561,35 +601,62 @@ class TransformerLM:
 
     # -- paged serving ------------------------------------------------------
     def supports_paged(self) -> bool:
-        """Block-paged decode covers pure-GQA stacks (per-slot recurrent
-        state for mamba/xlstm/MLA-latent blocks is a separate item)."""
+        """Block-paged serving covers GQA attention plus the recurrent
+        block types (mamba/mlstm/slstm — per-slot state slabs), i.e.
+        dense, ssm, and hybrid stacks.  MLA latent caches, sliding
+        windows, and mrope remain dense-only."""
         cfg = self.cfg
         descs = list(self.prefix_descs) + list(self.period_descs)
-        return (all(d[0] == "attn" for d in descs)
+        return (all(d[0] == "attn" or d[0] in RECURRENT_BLOCKS
+                    for d in descs)
                 and not cfg.sliding_window and cfg.rope != "mrope")
 
+    def has_recurrent_state(self) -> bool:
+        """True if any layer carries per-sequence recurrent state (the
+        serving engine must then provision a ``StateStore``)."""
+        return any(d[0] in RECURRENT_BLOCKS
+                   for d in list(self.prefix_descs) + list(self.period_descs))
+
+    def supports_prefix_sharing(self) -> bool:
+        """KV pages are position-indexed and sharable; recurrent state
+        is a running summary of the *whole* prefix and cannot be mapped
+        mid-sequence, so any recurrent layer disables prefix sharing."""
+        return self.supports_paged() and not self.has_recurrent_state()
+
     def init_paged_cache(self, num_blocks: int, block_size: int,
-                         dtype=jnp.bfloat16):
-        """Shared block pool: every attn layer gets (nb, bs, KV, hd) K/V
-        stores (periodic layers stacked on a leading scan axis).  There
-        is no batch axis — slots share the pool through page tables."""
+                         dtype=jnp.bfloat16, num_state_slots: int = 0):
+        """Shared block pool + recurrent state slabs.
+
+        Every attn layer gets (nb, bs, KV, hd) K/V stores with no batch
+        axis — slots share the pool through page tables.  Every
+        recurrent layer gets fixed-size state slabs with a leading
+        ``num_state_slots`` axis — slots own exactly one slab each (the
+        engine's ``StateStore`` hands them out).  Periodic layers stack
+        either kind on a leading scan axis.
+        """
         cfg = self.cfg
         if not self.supports_paged():
             raise NotImplementedError(
-                f"paged cache needs an attention-only stack without "
+                f"paged cache needs an attn/mamba/mlstm/slstm stack without "
                 f"sliding window/mrope (family={cfg.family!r})")
+        if self.has_recurrent_state() and num_state_slots < 1:
+            raise ValueError(
+                f"family {cfg.family!r} has recurrent layers: "
+                "init_paged_cache needs num_state_slots >= 1")
         kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
 
-        def store():
+        def store(desc):
+            if desc[0] in RECURRENT_BLOCKS:
+                return _sublayer_state(cfg, desc, num_state_slots, 0, dtype)
             return {"k": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
                     "v": jnp.zeros((num_blocks, block_size, kv, hd), dtype)}
 
         cache: Dict[str, Any] = {}
         if self.prefix_descs:
-            cache["prefix"] = [store() for _ in self.prefix_descs]
+            cache["prefix"] = [store(d) for d in self.prefix_descs]
         blocks = {}
-        for j in range(len(self.period_descs)):
-            one = store()
+        for j, desc in enumerate(self.period_descs):
+            one = store(desc)
             blocks[f"s{j}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(
                     a[None], (self.n_periods,) + a.shape).copy(), one)
@@ -598,26 +665,42 @@ class TransformerLM:
 
     def copy_paged_block(self, cache, src, dst):
         """COW fork: duplicate physical block ``src`` into ``dst`` across
-        every layer's K/V store (prefix layers keyed on axis 0, periodic
-        layers behind their leading scan axis)."""
+        every attn layer's K/V store (prefix layers keyed on axis 0,
+        periodic layers behind their leading scan axis).  Recurrent
+        slabs are left untouched — they are never shared (prefix sharing
+        is disabled for recurrent stacks), so a fork cannot involve
+        them."""
         out: Dict[str, Any] = {}
         if "prefix" in cache:
             out["prefix"] = [
                 jax.tree.map(lambda a: a.at[dst].set(a[src]), st)
-                for st in cache["prefix"]]
-        out["blocks"] = jax.tree.map(
-            lambda a: a.at[:, dst].set(a[:, src]), cache["blocks"])
+                if d[0] == "attn" else st
+                for d, st in zip(self.prefix_descs, cache["prefix"])]
+        blocks = {}
+        for j, d in enumerate(self.period_descs):
+            st = cache["blocks"][f"s{j}"]
+            blocks[f"s{j}"] = jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), st) \
+                if d[0] == "attn" else st
+        out["blocks"] = blocks
         return out
 
-    def paged_step(self, params, cache, tokens, page_table, lengths, t_valid):
+    def paged_step(self, params, cache, tokens, page_table, lengths, t_valid,
+                   state_slots=None):
         """Advance each slot by up to T tokens through the paged cache.
 
         tokens: (B,T) int32; page_table: (B,P) int32; lengths: (B,)
         tokens already cached per slot; t_valid: (B,) in [0,T] tokens of
-        this call that are real per slot.  Covers decode (T=1) and
-        chunked prefill (T=chunk) uniformly; slots may mix phases.
-        Returns (logits (B,V) at each slot's last valid token, cache).
+        this call that are real per slot; state_slots: (B,) int32 slab
+        of each slot's recurrent state (defaults to the identity map —
+        row ``b`` owns slab ``b`` — for direct model-level use; the
+        engine passes its ``StateStore`` assignment).  Covers decode
+        (T=1) and chunked prefill (T=chunk) uniformly; slots may mix
+        phases.  Returns (logits (B,V) at each slot's last valid token,
+        cache).
         """
+        if state_slots is None:
+            state_slots = jnp.arange(tokens.shape[0], dtype=jnp.int32)
         x = self._embed(params, tokens)
         new_cache: Dict[str, Any] = {}
         if self.prefix_descs:
@@ -625,7 +708,7 @@ class TransformerLM:
             for i, desc in enumerate(self.prefix_descs):
                 x, st = _paged_sublayer(params["prefix"][i], self.cfg, desc, x,
                                         cache["prefix"][i], page_table,
-                                        lengths, t_valid)
+                                        lengths, t_valid, state_slots)
                 pc.append(st)
             new_cache["prefix"] = pc
 
@@ -635,7 +718,7 @@ class TransformerLM:
             for j, desc in enumerate(self.period_descs):
                 x, st = _paged_sublayer(pp[f"s{j}"], self.cfg, desc, x,
                                         cc[f"s{j}"], page_table, lengths,
-                                        t_valid)
+                                        t_valid, state_slots)
                 states[f"s{j}"] = st
             return x, states
 

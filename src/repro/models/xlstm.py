@@ -128,28 +128,52 @@ def _mlstm_init(B, H, dh):
             jnp.zeros((B, H), jnp.float32))
 
 
-def mlstm_decode(p, cfg: ModelConfig, x, state):
-    """One token: x (B,1,d)."""
-    B = x.shape[0]
+def _mask_carry(new, old, keep):
+    """Per-row select over a tuple-of-arrays carry: row ``b`` advances
+    iff ``keep[b]`` (shared by the paged steps of both block types)."""
+    return tuple(jnp.where(keep.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+                 for a, b in zip(new, old))
+
+
+def mlstm_paged_step(p, cfg: ModelConfig, x, state, t_valid):
+    """Advance each row by up to T tokens from carried per-row state.
+
+    x: (B,T,d); state: (C, n, m) float32; t_valid: (B,) int32 — row
+    ``b`` consumes only its first ``t_valid[b]`` tokens (outputs past
+    that are garbage the caller ignores).  Runs the same ``_mlstm_step``
+    as ``mlstm_forward``'s scan, so chunked prefill replays the dense
+    prefill recurrence exactly; ``mlstm_decode`` is the T=1 case.
+    """
+    B, T, d = x.shape
     di, H, dh = _dims(cfg)
-    C, n, m = state
     up = x @ p["up"]
-    xi, z = jnp.split(up, 2, axis=-1)
-    q = (xi @ p["wq"]).reshape(B, H, dh).astype(jnp.float32) / np.sqrt(dh)
-    k = (xi @ p["wk"]).reshape(B, H, dh).astype(jnp.float32) / np.sqrt(dh)
-    v = (xi @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
-    gates = xi[:, 0].astype(jnp.float32) @ p["w_if"] + p["b_if"]
-    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
-    m_new = jnp.maximum(lf + m, li)
-    i_t = jnp.exp(li - m_new)
-    f_t = jnp.exp(lf + m - m_new)
-    C = f_t[..., None, None] * C + i_t[..., None, None] * (k[..., :, None] * v[..., None, :])
-    n = f_t[..., None] * n + i_t[..., None] * k
-    num = jnp.einsum("bhkv,bhk->bhv", C, q)
-    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
-    h = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)                      # (B,T,di)
+    q = (xi @ p["wq"]).reshape(B, T, H, dh) / np.sqrt(dh)
+    k = (xi @ p["wk"]).reshape(B, T, H, dh) / np.sqrt(dh)
+    v = (xi @ p["wv"]).reshape(B, T, H, dh)
+    gates = xi.astype(jnp.float32) @ p["w_if"] + p["b_if"]  # (B,T,2H)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    seq = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0),
+           jnp.arange(T, dtype=jnp.int32))
+
+    def step(carry, xs_):
+        t = xs_[-1]
+        new, h_t = _mlstm_step(carry, xs_[:-1])
+        return _mask_carry(new, carry, t < t_valid), h_t
+
+    state, hs = jax.lax.scan(step, state, seq)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, di).astype(x.dtype)
     y = (h * jax.nn.silu(z)) @ p["down"]
-    return y, (C, n, m_new)
+    return y, state
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, state):
+    """One token: x (B,1,d).  The T=1 case of ``mlstm_paged_step``."""
+    ones = jnp.ones((x.shape[0],), jnp.int32)
+    return mlstm_paged_step(p, cfg, x, state, ones)
 
 
 def slstm_params(key, cfg: ModelConfig, dtype):
@@ -227,9 +251,30 @@ def slstm_forward(p, cfg: ModelConfig, x, *, chunk_size: int = 64,
     return h @ p["down"], state
 
 
-def slstm_decode(p, cfg: ModelConfig, x, state):
+def slstm_paged_step(p, cfg: ModelConfig, x, state, t_valid):
+    """Advance each row by up to T tokens from carried per-row state.
+
+    x: (B,T,d); state: (h, c, n, m) each (B,di) float32; t_valid: (B,)
+    int32 caps how many of the T tokens are real per row.  Same
+    ``_slstm_step`` as ``slstm_forward``; ``slstm_decode`` is T=1.
+    """
+    B, T, _ = x.shape
+    di, H, dh = _dims(cfg)
     xi = x @ p["up"]
-    wx = (xi @ p["W"])[:, 0]
-    new = _slstm_step(p, cfg, wx, state)
-    h = new[0][:, None, :].astype(x.dtype)
-    return h @ p["down"], new
+    wx = xi @ p["W"]                                        # (B,T,4di)
+    seq = (jnp.moveaxis(wx, 1, 0), jnp.arange(T, dtype=jnp.int32))
+
+    def step(st, xs_):
+        wx_t, t = xs_
+        new = _slstm_step(p, cfg, wx_t, st)
+        return _mask_carry(new, st, t < t_valid), new[0]
+
+    state, hs = jax.lax.scan(step, state, seq)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B,T,di)
+    return h @ p["down"], state
+
+
+def slstm_decode(p, cfg: ModelConfig, x, state):
+    """One token: x (B,1,d).  The T=1 case of ``slstm_paged_step``."""
+    ones = jnp.ones((x.shape[0],), jnp.int32)
+    return slstm_paged_step(p, cfg, x, state, ones)

@@ -36,6 +36,19 @@ crosses boundaries, and released in full on eviction; a request whose
 reservation does not fit stays queued — never a mid-decode allocation
 failure.
 
+**Recurrent / hybrid families (mamba, xLSTM, jamba-style stacks)** run
+through the same paged scheduler: their attention layers page as above
+while each recurrent layer keeps per-sequence state in fixed-size
+slabs handed out by a ``StateStore`` (``kv_cache.py``).  Admission is
+all-or-nothing across *both* pools — a request needs its worst-case
+block reservation AND one free state slab, else it stays queued — and
+eviction frees both.  A recycled slab still holds the evictee's state;
+the model's paged step zeroes any row whose sequence starts this call
+(``lengths == 0``), so state can never leak across requests.  These
+families decode *correctly* only here: the dense engine's left-pad
+join approximation would run pad tokens through the recurrence and
+corrupt the state summary.
+
 **Prefix sharing + copy-on-write (paged only)** — the block pool is
 content-addressed: whenever a slot completes a page, the engine
 registers the block under the chain digest of the token prefix it
@@ -73,7 +86,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kv_cache import ROOT_DIGEST, BlockAllocator, CacheFullError, chain_digest
+from .kv_cache import (ROOT_DIGEST, BlockAllocator, CacheFullError,
+                       StateStore, chain_digest)
 from .steps import make_decode_step, make_prefill_step, make_slot_sampler
 
 
@@ -137,6 +151,7 @@ class ServeEngine:
                  paged: Optional[bool] = None, block_size: int = 16,
                  num_blocks: Optional[int] = None, prefill_chunk: int = 32,
                  share_prefix: Optional[bool] = None,
+                 num_state_slots: Optional[int] = None,
                  trace_logits: bool = False):
         self.model = model
         self.params = params
@@ -190,16 +205,36 @@ class ServeEngine:
             raise ValueError(
                 "share_prefix=True requires paged mode (the dense cache has "
                 "no block pool to share)")
-        self.share_prefix = (self.paged if share_prefix is None
-                             else bool(share_prefix))
+        # recurrent state slabs disable prefix sharing: a slab summarizes
+        # the whole prefix, so resident KV pages alone cannot seed a joiner
+        sharable = not self.paged or bool(
+            getattr(model, "supports_prefix_sharing", lambda: True)())
+        if share_prefix and not sharable:
+            raise ValueError(
+                f"share_prefix=True but {type(model).__name__} "
+                f"(family={getattr(getattr(model, 'cfg', None), 'family', '?')!r}) "
+                "has recurrent layers whose state cannot be shared across "
+                "requests: a mamba/xLSTM state slab summarizes its entire "
+                "prefix, so mapping resident KV pages cannot reconstruct "
+                "it.  Run with share_prefix=False (or leave it on auto).")
+        self.share_prefix = (self.paged and sharable) if share_prefix is None \
+            else bool(share_prefix)
         self._pages_per_slot = -(-capacity // block_size)
         if num_blocks is None:
             num_blocks = batch_size * self._pages_per_slot
         self.allocator = BlockAllocator(num_blocks, block_size) \
             if self.paged else None
+        # recurrent families: per-slot state slabs beside the block pool
+        needs_state = self.paged and bool(
+            getattr(model, "has_recurrent_state", lambda: False)())
+        self.num_state_slots = (batch_size if num_state_slots is None
+                                else num_state_slots) if needs_state else 0
+        self.state_store = StateStore(self.num_state_slots) \
+            if needs_state else None
         self._page_table = np.zeros((batch_size, self._pages_per_slot),
                                     np.int32)
         self._lengths = np.zeros((batch_size,), np.int32)
+        self._state_slots = np.zeros((batch_size,), np.int32)
         self._reserved = 0            # lazily-claimable blocks promised out
         self._pool_epoch = 0          # bumped on release/register: a queued
         #                               request's cached prefix match stays
@@ -278,11 +313,17 @@ class ServeEngine:
             return bool(self._pending) or self.n_active > 0
 
     def pool_stats(self) -> Optional[Dict[str, int]]:
-        """Block-pool occupancy incl. shared vs private split (paged)."""
+        """Block-pool occupancy incl. shared vs private split (paged),
+        plus state-slab occupancy for recurrent families."""
         if self.allocator is None:
             return None
         stats = self.allocator.stats()
         stats["n_reserved"] = self._reserved
+        if self.state_store is not None:
+            s = self.state_store.stats()
+            stats["num_state_slots"] = s["num_slots"]
+            stats["n_state_free"] = s["n_free"]
+            stats["n_state_live"] = s["n_live"]
         return stats
 
     def step(self) -> List[GenerationResult]:
@@ -478,9 +519,11 @@ class ServeEngine:
         if not busy:
             return finished
         if self._paged_cache is None:
+            kw = {"num_state_slots": self.num_state_slots} \
+                if self.state_store is not None else {}
             self._paged_cache = self.model.init_paged_cache(
                 self.allocator.num_blocks, self.block_size,
-                dtype=self.cache_dtype)
+                dtype=self.cache_dtype, **kw)
         prefilling = any(s.prefill_off < len(s.prompt) for _, s in busy)
         T = self.prefill_chunk if prefilling else 1
         tokens = np.zeros((self.batch_size, T), np.int32)
@@ -509,7 +552,7 @@ class ServeEngine:
         logits, self._paged_cache = self._paged_fn(
             self.params, self._paged_cache, jnp.asarray(tokens),
             jnp.asarray(self._page_table), jnp.asarray(self._lengths),
-            jnp.asarray(t_valid))
+            jnp.asarray(t_valid), jnp.asarray(self._state_slots))
         if prefilling:
             self.n_prefill_chunks += 1
         emit: Dict[int, _PagedSlot] = {}
@@ -605,8 +648,11 @@ class ServeEngine:
         its matched prefix shares forever are discounted, everything
         else (fresh prompt pages, decode extensions, one possible COW
         fork of the tail page) is budgeted up front, so mid-decode
-        allocation never fails.  The queue head blocks until it fits —
-        the request stays queued, decode continues, nothing crashes."""
+        allocation never fails.  Recurrent families additionally need
+        one free state slab — checked before anything is taken, so
+        admission stays all-or-nothing across both pools.  The queue
+        head blocks until it fits — the request stays queued, decode
+        continues, nothing crashes."""
         free = [i for i, s in enumerate(self._slots) if s is None]
         mid_decode = self.n_active > 0
         joins = []
@@ -622,6 +668,9 @@ class ServeEngine:
                 needed = total - matched // self.block_size
                 if needed > self.allocator.n_free - self._reserved:
                     break
+                if self.state_store is not None \
+                        and self.state_store.n_free == 0:
+                    break              # state slabs exhausted: stay queued
                 self._pending.popleft()
                 n_fresh = self.allocator.blocks_for(plen) - len(mapped)
                 try:
@@ -632,9 +681,15 @@ class ServeEngine:
                 self.allocator.share(mapped)
                 blocks = mapped + fresh
                 self._reserved += needed - n_fresh
+                slab = 0
+                if self.state_store is not None:
+                    slab = self.state_store.admit(req.rid)
+                    # the slab's previous state is zeroed by the model's
+                    # first step for this slot (lengths == 0 blanking)
+                    self.state_store.mark_reset(slab)
                 joins.append((free.pop(0), req, blocks, needed - n_fresh,
-                              matched, digests))
-        for slot_i, req, blocks, reserve, matched, digests in joins:
+                              matched, digests, slab))
+        for slot_i, req, blocks, reserve, matched, digests, slab in joins:
             if mid_decode:
                 self.n_joins += 1
             if matched:
@@ -646,6 +701,7 @@ class ServeEngine:
             self._page_table[slot_i, :] = 0
             self._page_table[slot_i, :len(blocks)] = blocks
             self._lengths[slot_i] = matched
+            self._state_slots[slot_i] = slab
 
     def _extend_blocks(self, slot_i: int, slot: _PagedSlot,
                        n_tokens: int) -> None:
@@ -724,6 +780,8 @@ class ServeEngine:
             # refcounted release: shared blocks stay resident (and
             # content-addressable) as long as any other slot maps them
             self.allocator.release(slot.blocks)
+            if self.state_store is not None:
+                self.state_store.evict(slot.rid)
             self._pool_epoch += 1
             self._reserved -= slot.reserve_left
             self._page_table[i, :] = 0

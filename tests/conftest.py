@@ -1,12 +1,23 @@
-"""Shared test configuration: fixed-seed hypothesis profiles.
+"""Shared test configuration: fixed-seed hypothesis profiles + the
+cross-family serving conformance axis.
 
 The tier-1 suite must pass with or without hypothesis installed (the
 property tests degrade to deterministic fallbacks).  When it *is*
 installed, ``HYPOTHESIS_PROFILE=ci`` selects a derandomized profile so
 the CI property job explores the same examples run-to-run — a failure
 there is a regression, never flake.
+
+``family_model`` parametrizes engine-conformance tests over one tiny
+config per serving family — transformer (attention-only), pure mamba,
+xLSTM (mLSTM+sLSTM), and hybrid (attention+mamba, jamba-style) — so
+every ServeEngine guarantee is pinned for every model family.  CI runs
+one matrix job per family via ``-k "<family>"``; the fixture is
+session-scoped so the two conformance modules share each family's
+params.
 """
 import os
+
+import pytest
 
 try:
     from hypothesis import settings
@@ -19,3 +30,38 @@ else:
     _profile = os.environ.get("HYPOTHESIS_PROFILE")
     if _profile:
         settings.load_profile(_profile)
+
+
+from repro.models.config import ModelConfig, SSMConfig  # noqa: E402
+
+TINY_SERVE = ModelConfig(
+    arch_id="tiny-serve", family="dense", n_layers=2, d_model=32,
+    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+    norm="rmsnorm", mlp_act="swiglu", rope="rope",
+    param_dtype="float32", compute_dtype="float32")
+
+_SSM = SSMConfig(d_state=8, d_conv=4, expand=2)
+FAMILY_CFGS = {
+    "transformer": TINY_SERVE,
+    # attn_layer_offset >= period: no layer index matches => pure-SSM stack
+    "mamba": TINY_SERVE.replace(
+        arch_id="tiny-mamba", family="hybrid", ssm=_SSM,
+        attn_layer_period=1, attn_layer_offset=1),
+    "xlstm": TINY_SERVE.replace(
+        arch_id="tiny-xlstm", family="ssm", d_ff=0, n_kv_heads=4,
+        rope="none",
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2, slstm_every=2)),
+    "hybrid": TINY_SERVE.replace(
+        arch_id="tiny-hybrid", family="hybrid", ssm=_SSM,
+        attn_layer_period=2, attn_layer_offset=0),
+}
+RECURRENT_FAMILIES = ("mamba", "xlstm", "hybrid")
+
+
+@pytest.fixture(scope="session", params=list(FAMILY_CFGS))
+def family_model(request):
+    """(family name, model, params) — the engine conformance matrix axis."""
+    import jax
+    from repro.models import build_model
+    model = build_model(FAMILY_CFGS[request.param])
+    return request.param, model, model.init(jax.random.PRNGKey(0))

@@ -2,18 +2,29 @@
 
 Three layers of guarantees, checked bottom-up:
 
-  * ``BlockAllocator`` — free-list invariants (no double allocation,
-    conservation, all-or-nothing failure) under unit + property tests;
+  * ``BlockAllocator`` / ``StateStore`` — free-list and slab-lifecycle
+    invariants (no double allocation, no aliasing, conservation,
+    all-or-nothing failure, stale state flagged until reset) under unit
+    + property tests;
   * the paged decode path — bit-for-bit identical logits to the dense
-    decode path on a toy transformer, including through a *shuffled*
-    page table, and the paged Pallas kernel against its oracle;
+    decode path, including through a *shuffled* page table, and the
+    paged Pallas kernel against its oracle;
   * the ``ServeEngine`` paged scheduler — mid-decode joins produce the
     same tokens as a fresh dense run (the left-pad approximation the
-    paged cache removes), eviction returns every block to the pool, and
-    a request that does not fit the pool stays queued without crashing.
+    paged cache removes), eviction returns every block and state slab
+    to their pools, and a request that does not fit either pool stays
+    queued without crashing.
+
+The engine guarantees run as a **cross-family conformance matrix**: the
+``family_model`` fixture parametrizes them over transformer, pure-mamba,
+xLSTM (mLSTM+sLSTM), and hybrid (attention+mamba, jamba-style) stacks —
+one stream-pipeline substrate serving any network as a filter is the
+paper's core claim, so every engine guarantee must hold for every model
+family, not just attention.  (CI runs one matrix job per family via
+``-k`` so a regression is attributable to its family in the Actions UI.)
 
 ``hypothesis`` is optional (mirrors tests/test_property.py): the
-property test skips without it, deterministic randomized fallbacks
+property tests skip without it, deterministic randomized fallbacks
 always run.
 """
 import importlib.util
@@ -23,9 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import RECURRENT_FAMILIES
 from repro.models import build_model
 from repro.models.config import ModelConfig
-from repro.serving import BlockAllocator, CacheFullError, ServeEngine
+from repro.serving import (BlockAllocator, CacheFullError, ServeEngine,
+                           StateStore)
 
 HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 
@@ -235,30 +248,160 @@ if HAVE_HYPOTHESIS:
         _run_alloc_sequence(ops)
 
 
+# -- StateStore: recurrent state slab lifecycle -------------------------------
+
+def test_state_store_admit_evict_roundtrip():
+    s = StateStore(num_slots=3)
+    a, b = s.admit(10), s.admit(11)
+    assert a != b
+    assert s.n_free == 1 and s.n_live == 2
+    assert s.slab_of(10) == a and s.owner_of(a) == 10
+    assert s.slab_of(99) is None and s.owner_of(2) is None
+    assert s.evict(10) == a
+    assert s.owner_of(a) is None and s.slab_of(10) is None
+    assert s.n_free == 2 and s.n_live == 1
+    s.evict(11)
+    assert s.n_free == 3 and s.n_live == 0
+
+
+def test_state_store_full_is_all_or_nothing():
+    s = StateStore(num_slots=1)
+    s.admit(0)
+    with pytest.raises(CacheFullError):
+        s.admit(1)
+    assert s.n_live == 1 and s.slab_of(1) is None  # store unchanged
+    s.evict(0)
+    assert s.admit(1) is not None                  # the slab is reusable
+
+
+def test_state_store_lifecycle_guards():
+    s = StateStore(num_slots=2)
+    with pytest.raises(ValueError):
+        StateStore(num_slots=0)
+    slab = s.admit(7)
+    with pytest.raises(ValueError, match="already holds"):
+        s.admit(7)                                 # one slab per request
+    s.evict(7)
+    with pytest.raises(ValueError, match="double evict"):
+        s.evict(7)
+    with pytest.raises(ValueError, match="free slab"):
+        s.mark_reset(slab)                         # reset needs an owner
+
+
+def test_state_store_stale_until_reset():
+    """Evicted state stays flagged until the next owner resets it —
+    the host-side mirror of 'state never survives eviction'."""
+    s = StateStore(num_slots=1)
+    slab = s.admit(0)
+    assert not s.is_stale(slab)                    # never-used slab is clean
+    s.evict(0)
+    assert s.is_stale(slab)                        # evictee's state resident
+    assert s.admit(1) == slab
+    assert s.is_stale(slab)                        # still dirty at handoff
+    s.mark_reset(slab)
+    assert not s.is_stale(slab)
+
+
+def _run_state_sequence(ops):
+    """Shared property body for admit/evict interleavings.  ``ops`` is a
+    list of (kind, x): kind 0 admits a fresh request id, kind 1 evicts
+    the x-th live request.  Invariants after every op: slab ownership
+    mirrors a host-side model; no slab is ever owned by two requests;
+    free + live == capacity; a full store fails all-or-nothing; a
+    recycled slab that ever held state arrives flagged stale (state
+    cannot silently survive eviction) and admit/mark_reset clears it.
+    """
+    store = StateStore(num_slots=6)
+    live = {}                          # mirror: rid -> slab
+    used = set()                       # slabs that ever held an owner
+    next_rid = 0
+    for kind, x in ops:
+        if kind == 0:
+            try:
+                slab = store.admit(next_rid)
+            except CacheFullError:
+                assert store.n_free == 0   # only a full store may refuse
+                continue
+            assert 0 <= slab < store.num_slots
+            assert slab not in live.values(), "slab aliased to two requests"
+            if slab in used:
+                assert store.is_stale(slab), \
+                    "recycled slab handed over without a stale flag"
+            store.mark_reset(slab)     # the engine zeroes on first step
+            assert not store.is_stale(slab)
+            live[next_rid] = slab
+            used.add(slab)
+            next_rid += 1
+        elif kind == 1 and live:
+            rid = sorted(live)[x % len(live)]
+            slab = store.evict(rid)
+            assert slab == live.pop(rid)
+            assert store.owner_of(slab) is None
+            assert store.is_stale(slab)
+        # conservation + ownership mirror
+        assert store.n_free + store.n_live == store.num_slots
+        assert store.n_live == len(live)
+        for rid, slab in live.items():
+            assert store.slab_of(rid) == slab and store.owner_of(slab) == rid
+        slabs = list(live.values())
+        assert len(set(slabs)) == len(slabs), "slab leak / alias"
+    for rid in list(live):
+        store.evict(rid)
+    assert store.n_free == store.num_slots and store.n_live == 0
+    with pytest.raises(ValueError):
+        store.evict(-1)                # fully drained: nothing evictable
+
+
+def test_state_store_random_sequences_deterministic():
+    rng = np.random.default_rng(17)
+    for _ in range(20):
+        ops = [(int(rng.integers(0, 2)), int(rng.integers(0, 16)))
+               for _ in range(60)]
+        _run_state_sequence(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 15)),
+                    max_size=80))
+    def test_state_store_property_slab_lifecycle(ops):
+        _run_state_sequence(ops)
+
+
 # -- paged decode vs dense decode: bit-for-bit --------------------------------
 
-def _copy_dense_cache_to_pages(model, dense_cache, paged_cache, page_table,
-                               block_size):
-    """Scatter a B=1 dense cache's rows into pool blocks per the table."""
+def _copy_dense_cache_to_pages(dense_cache, paged_cache, page_table,
+                               block_size, slab=0):
+    """Scatter a B=1 dense cache into the paged layout: K/V rows land in
+    pool blocks per the page table, recurrent state (conv/ssm/mlstm/
+    slstm leaves — anything that is not a "k"/"v" store) lands in slab
+    row ``slab`` of its state array."""
+    from jax.tree_util import DictKey, tree_map_with_path
     pt = np.asarray(page_table)[0]
     cap = len(pt) * block_size
 
-    def to_pages(dense_leaf, paged_leaf):
-        src = np.asarray(dense_leaf)[:, 0]         # (L, C, kv, hd)
+    def cp(path, dense_leaf, paged_leaf):
+        key = next((p.key for p in reversed(path)
+                    if isinstance(p, DictKey)), None)
+        src = np.asarray(dense_leaf)[:, 0]         # strip batch: (L, ...)
         out = np.asarray(paged_leaf).copy()
-        for logical in range(min(cap, src.shape[1])):
-            blk, off = pt[logical // block_size], logical % block_size
-            out[:, blk, off] = src[:, logical]
+        if key in ("k", "v"):                      # (L, C, kv, hd) -> blocks
+            for logical in range(min(cap, src.shape[1])):
+                blk, off = pt[logical // block_size], logical % block_size
+                out[:, blk, off] = src[:, logical]
+        else:                                      # state -> its slab row
+            out[:, slab] = src
         return jnp.asarray(out)
 
-    return jax.tree.map(to_pages, dense_cache, paged_cache)
+    return tree_map_with_path(cp, dense_cache, paged_cache)
 
 
-def test_paged_decode_logits_match_dense_bitwise(tiny_model):
+def test_paged_decode_logits_match_dense_bitwise(family_model):
     """Same cache content, shuffled physical placement: the paged read/
     write path must reproduce dense decode logits exactly, step after
-    step (both caches evolve through their own insert paths)."""
-    model, params = tiny_model
+    step (both caches evolve through their own insert paths) — for every
+    model family, with recurrent state carried in a non-trivial slab."""
+    family, model, params = family_model
     bs, P = 4, 8                       # C = 32
     cap = bs * P
     prompt = np.array([5, 9, 3, 17, 30], np.int32)
@@ -266,26 +409,31 @@ def test_paged_decode_logits_match_dense_bitwise(tiny_model):
                                     capacity=cap, cache_dtype=jnp.float32)
     pt = jnp.asarray(
         np.random.default_rng(1).permutation(P).astype(np.int32)[None])
+    slab = 2                           # state deliberately not at row 0
+    kw = {"num_state_slots": 4} if model.has_recurrent_state() else {}
     paged = _copy_dense_cache_to_pages(
-        model, dense, model.init_paged_cache(P, bs, dtype=jnp.float32),
-        pt, bs)
+        dense, model.init_paged_cache(P, bs, dtype=jnp.float32, **kw),
+        pt, bs, slab=slab)
+    state_slots = jnp.asarray([slab], jnp.int32)
     lengths = jnp.asarray([len(prompt)], jnp.int32)
     ones = jnp.asarray([1], jnp.int32)
     tok = jnp.asarray([[int(jnp.argmax(logits_d[0]))]], jnp.int32)
     for step in range(8):
         ld, dense = model.decode_step(params, dense, tok,
                                       jnp.int32(int(lengths[0])))
-        lp, paged = model.paged_step(params, paged, tok, pt, lengths, ones)
+        lp, paged = model.paged_step(params, paged, tok, pt, lengths, ones,
+                                     state_slots)
         assert np.array_equal(np.asarray(ld), np.asarray(lp)), \
-            f"paged/dense logits diverged at decode step {step}"
+            f"{family}: paged/dense logits diverged at decode step {step}"
         tok = jnp.asarray([[int(jnp.argmax(ld[0]))]], jnp.int32)
         lengths = lengths + 1
 
 
-def test_chunked_prefill_invariant_to_chunk_size(tiny_model):
+def test_chunked_prefill_invariant_to_chunk_size(family_model):
     """The same prompt prefilled in 1/3/16-token chunks must land in the
-    same engine tokens — chunking is a scheduling choice, not semantics."""
-    model, params = tiny_model
+    same engine tokens — chunking is a scheduling choice, not semantics,
+    for attention page tables and recurrent state slabs alike."""
+    family, model, params = family_model
     prompt = np.arange(1, 11, dtype=np.int32)
     runs = []
     for chunk in (1, 3, 16):
@@ -294,18 +442,20 @@ def test_chunked_prefill_invariant_to_chunk_size(tiny_model):
                           prefill_chunk=chunk)
         assert eng.paged
         runs.append(list(eng.serve([prompt])[0].tokens))
-    assert runs[0] == runs[1] == runs[2]
+    assert runs[0] == runs[1] == runs[2], family
 
 
 # -- engine conformance: joins, eviction, cache-full --------------------------
 
-def test_mid_decode_join_matches_fresh_dense_run(tiny_model):
+def test_mid_decode_join_matches_fresh_dense_run(family_model):
     """The tentpole claim: a request joining mid-decode decodes at its
-    *true* positions (no left-pad shift), so its tokens equal a fresh
-    dense run of that prompt alone."""
-    model, params = tiny_model
+    *true* positions (no left-pad shift — which for recurrent layers
+    would run pad tokens through the state recurrence), so its tokens
+    equal a fresh dense run of that prompt alone."""
+    family, model, params = family_model
     eng = ServeEngine(model, params, batch_size=2, capacity=32,
                       max_new_tokens=8, block_size=4, prefill_chunk=4)
+    assert eng.paged, f"{family} fell back to the dense engine"
     rng = np.random.default_rng(3)
     first = rng.integers(1, TINY.vocab_size, 6).astype(np.int32)
     eng.submit(first)
@@ -318,12 +468,12 @@ def test_mid_decode_join_matches_fresh_dense_run(tiny_model):
         results += eng.step()
     assert eng.n_joins == 1
     by_id = {r.request_id: list(r.tokens) for r in results}
-    assert by_id[0] == _fresh_dense_tokens(model, params, first, 8)
-    assert by_id[1] == _fresh_dense_tokens(model, params, late, 8)
+    assert by_id[0] == _fresh_dense_tokens(model, params, first, 8), family
+    assert by_id[1] == _fresh_dense_tokens(model, params, late, 8), family
 
 
-def test_concurrent_slots_each_match_fresh_runs(tiny_model):
-    model, params = tiny_model
+def test_concurrent_slots_each_match_fresh_runs(family_model):
+    family, model, params = family_model
     rng = np.random.default_rng(11)
     prompts = [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
                for n in (5, 9, 3, 7, 12)]
@@ -332,12 +482,15 @@ def test_concurrent_slots_each_match_fresh_runs(tiny_model):
     res = eng.serve(prompts)
     assert [r.request_id for r in res] == [0, 1, 2, 3, 4]
     for p, r in zip(prompts, res):
-        assert list(r.tokens) == _fresh_dense_tokens(model, params, p, 6)
+        assert list(r.tokens) == _fresh_dense_tokens(model, params, p, 6), \
+            family
     assert eng.n_prefill_chunks > eng.n_prefills == 5  # chunked, not one-shot
 
 
-def test_eviction_frees_all_blocks(tiny_model):
-    model, params = tiny_model
+def test_eviction_frees_all_blocks(family_model):
+    """Eviction must return every resource to its pool: KV blocks,
+    reservations, and — for recurrent families — state slabs."""
+    family, model, params = family_model
     eng = ServeEngine(model, params, batch_size=2, capacity=32,
                       max_new_tokens=4, block_size=4, prefill_chunk=4)
     total = eng.allocator.num_blocks
@@ -349,6 +502,12 @@ def test_eviction_frees_all_blocks(tiny_model):
     assert eng.allocator.n_free == total
     assert eng.allocator.n_live == 0
     assert eng._reserved == 0
+    if family in RECURRENT_FAMILIES:
+        assert eng.state_store is not None
+        assert eng.state_store.n_live == 0
+        assert eng.state_store.n_free == eng.num_state_slots
+    else:
+        assert eng.state_store is None
 
 
 def test_blocks_freed_as_each_request_finishes(tiny_model):
@@ -372,11 +531,11 @@ def test_blocks_freed_as_each_request_finishes(tiny_model):
     assert eng.allocator.n_free == eng.allocator.num_blocks
 
 
-def test_cache_full_request_stays_queued(tiny_model):
+def test_cache_full_request_stays_queued(family_model):
     """A pool sized for one worst-case request at a time: the second
     request must wait (no crash, no partial admission) and still run to
     the correct tokens once the first evicts."""
-    model, params = tiny_model
+    family, model, params = family_model
     # worst case per request: ceil((8 prompt + 4 new) / 4) = 3 blocks
     eng = ServeEngine(model, params, batch_size=2, capacity=16,
                       max_new_tokens=4, block_size=4, num_blocks=3,
@@ -389,7 +548,32 @@ def test_cache_full_request_stays_queued(tiny_model):
     assert eng.n_joins == 0            # b could only start after a evicted
     for p, r in zip((a, b), res):
         assert list(r.tokens) == _fresh_dense_tokens(model, params, p, 4,
-                                                     capacity=32)
+                                                     capacity=32), family
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def test_state_slots_full_request_stays_queued(family_model):
+    """Recurrent families have a second exhaustible pool: with a single
+    state slab, the second request must stay queued — all-or-nothing
+    across both pools — then run correctly on the recycled (and reset)
+    slab once the first evicts."""
+    family, model, params = family_model
+    if family not in RECURRENT_FAMILIES:
+        pytest.skip("transformer stacks carry no recurrent state")
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4, prefill_chunk=4,
+                      num_state_slots=1)
+    rng = np.random.default_rng(13)
+    a = rng.integers(1, TINY.vocab_size, 7).astype(np.int32)
+    b = rng.integers(1, TINY.vocab_size, 5).astype(np.int32)
+    res = eng.serve([a, b])
+    assert len(res) == 2
+    assert eng.n_joins == 0            # blocks were free; only slabs gated
+    assert eng.allocator.num_blocks > 6  # the block pool was never the limit
+    for p, r in zip((a, b), res):
+        assert list(r.tokens) == _fresh_dense_tokens(model, params, p, 4), \
+            family                     # b is clean on the recycled slab
+    assert eng.state_store.n_free == 1 and eng.state_store.n_live == 0
     assert eng.allocator.n_free == eng.allocator.num_blocks
 
 
@@ -412,6 +596,25 @@ def test_paged_mode_autodetects_and_validates(tiny_model):
     assert eng.paged
     eng = ServeEngine(model, params, greedy=False, paged=True)
     assert eng.paged and eng.share_prefix
+
+
+def test_share_prefix_rejected_for_recurrent_families(family_model):
+    """A recurrent layer's state summarizes its whole prefix, so mapping
+    resident KV pages cannot seed a joiner: requesting share_prefix=True
+    must fail loudly (naming the reason), auto must resolve to off —
+    and neither may silently fall back to the dense engine."""
+    family, model, params = family_model
+    if family not in RECURRENT_FAMILIES:
+        eng = ServeEngine(model, params)   # transformer: sharing stays auto-on
+        assert eng.paged and eng.share_prefix
+        return
+    with pytest.raises(ValueError, match="recurrent layers"):
+        ServeEngine(model, params, share_prefix=True)
+    eng = ServeEngine(model, params)       # auto: paged on, sharing off
+    assert eng.paged and not eng.share_prefix
+    assert eng.state_store is not None
+    eng = ServeEngine(model, params, share_prefix=False)
+    assert eng.paged and not eng.share_prefix
 
 
 # -- prefix sharing + copy-on-write -------------------------------------------
