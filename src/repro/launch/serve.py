@@ -93,6 +93,12 @@ def main():
                     help="recurrent families: state slabs in the pool "
                          "(default: one per batch slot; fewer gates "
                          "admission like a small block pool)")
+    ap.add_argument("--burst", type=int, default=8,
+                    help="decode burst length K: fused device steps per "
+                         "host round-trip when no admissions/prefills are "
+                         "pending (1 = drain every token; the engine "
+                         "degrades to 1 itself whenever the queue is "
+                         "non-empty, so join latency is unchanged)")
     args = ap.parse_args()
 
     if args.family != "arch":
@@ -113,6 +119,7 @@ def main():
                          prefill_chunk=args.prefill_chunk,
                          share_prefix=tri[args.share_prefix],
                          num_state_slots=args.num_state_slots,
+                         burst=args.burst,
                          temperature=args.temperature,
                          top_k=args.top_k, seed=args.seed)
 
@@ -165,6 +172,14 @@ def main():
           f"evictions={engine.n_evictions}"
           + (f" prefill_chunks={engine.n_prefill_chunks}" if engine.paged
              else ""))
+    ls = engine.loop_stats()
+    decoded = max(1, ls["n_device_steps"])
+    print(f"decode loop: burst K={ls['burst']}, {ls['n_bursts']} bursts / "
+          f"{ls['n_device_steps']} device steps, "
+          f"{ls['n_host_syncs']} host syncs "
+          f"({ls['n_host_syncs'] / decoded:.2f}/step), "
+          f"{ls['n_state_uploads']} state uploads, "
+          f"{ls['n_burst_early_exits']} early exits")
     if engine.paged:
         a = engine.allocator
         s = engine.pool_stats()

@@ -200,20 +200,31 @@ def mamba_paged_step(p, cfg: ModelConfig, x, conv_state, ssm_state, t_valid):
     xs = jax.nn.silu(_conv_taps(xp, p["conv_w"], p["conv_b"], T))
     dt, Bc, Cc = _ssm_inputs(p, cfg, xs)
     A = -jnp.exp(p["A_log"])
-    seq = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
-           jnp.moveaxis(xs.astype(jnp.float32), 1, 0),
-           jnp.moveaxis(Bc.astype(jnp.float32), 1, 0),
-           jnp.moveaxis(Cc.astype(jnp.float32), 1, 0),
-           jnp.arange(T, dtype=jnp.int32))
+    if T == 1:
+        # megastep fast path: the serving engine's decode-burst body is
+        # T=1 by construction — skip the scan machinery, apply the same
+        # _ssm_step once (bitwise identical to the scan's single step)
+        h_new, y0 = _ssm_step(ssm_state, dt[:, 0].astype(jnp.float32),
+                              xs[:, 0].astype(jnp.float32),
+                              Bc[:, 0].astype(jnp.float32),
+                              Cc[:, 0].astype(jnp.float32), A)
+        h_last = jnp.where((t_valid > 0)[:, None, None], h_new, ssm_state)
+        y = y0[:, None]                                           # (B,1,di)
+    else:
+        seq = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(xs.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(Bc.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(Cc.astype(jnp.float32), 1, 0),
+               jnp.arange(T, dtype=jnp.int32))
 
-    def step(h, t_):
-        dt_t, x_t, b_t, c_t, t = t_
-        h_new, y_t = _ssm_step(h, dt_t, x_t, b_t, c_t, A)
-        h = jnp.where((t < t_valid)[:, None, None], h_new, h)
-        return h, y_t
+        def step(h, t_):
+            dt_t, x_t, b_t, c_t, t = t_
+            h_new, y_t = _ssm_step(h, dt_t, x_t, b_t, c_t, A)
+            h = jnp.where((t < t_valid)[:, None, None], h_new, h)
+            return h, y_t
 
-    h_last, ys = jax.lax.scan(step, ssm_state, seq)
-    y = jnp.moveaxis(ys, 0, 1)                                    # (B,T,di)
+        h_last, ys = jax.lax.scan(step, ssm_state, seq)
+        y = jnp.moveaxis(ys, 0, 1)                                # (B,T,di)
     y = y + p["D"][None, None] * xs.astype(jnp.float32)
     y = y.astype(x.dtype) * jax.nn.silu(z)
     return y @ p["out_proj"], (new_conv_state, h_last)

@@ -733,8 +733,14 @@ class TransformerLM:
             x, blocks = jax.lax.scan(body, x, (params["blocks"],
                                                cache["blocks"]))
         new_cache["blocks"] = blocks
-        last = jnp.clip(t_valid - 1, 0, None)                    # (B,)
-        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,D)
+        if tokens.shape[1] == 1:
+            # megastep fast path: decode bursts are T=1, the only valid
+            # token is position 0 — skip the gather (bitwise identical)
+            x_last = x
+        else:
+            last = jnp.clip(t_valid - 1, 0, None)                # (B,)
+            x_last = jnp.take_along_axis(x, last[:, None, None],
+                                         axis=1)                 # (B,1,D)
         logits = self._head(params, x_last)[:, 0]
         return logits, new_cache
 

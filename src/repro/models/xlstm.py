@@ -153,19 +153,29 @@ def mlstm_paged_step(p, cfg: ModelConfig, x, state, t_valid):
     v = (xi @ p["wv"]).reshape(B, T, H, dh)
     gates = xi.astype(jnp.float32) @ p["w_if"] + p["b_if"]  # (B,T,2H)
     log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
-    seq = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
-           jnp.moveaxis(k.astype(jnp.float32), 1, 0),
-           jnp.moveaxis(v.astype(jnp.float32), 1, 0),
-           jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0),
-           jnp.arange(T, dtype=jnp.int32))
+    if T == 1:
+        # megastep fast path: decode-burst bodies are T=1 — one direct
+        # _mlstm_step, bitwise identical to the length-1 scan
+        new, h0 = _mlstm_step(state, (q[:, 0].astype(jnp.float32),
+                                      k[:, 0].astype(jnp.float32),
+                                      v[:, 0].astype(jnp.float32),
+                                      log_i[:, 0], log_f[:, 0]))
+        state = _mask_carry(new, state, t_valid > 0)
+        h = h0.reshape(B, T, di).astype(x.dtype)
+    else:
+        seq = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0),
+               jnp.arange(T, dtype=jnp.int32))
 
-    def step(carry, xs_):
-        t = xs_[-1]
-        new, h_t = _mlstm_step(carry, xs_[:-1])
-        return _mask_carry(new, carry, t < t_valid), h_t
+        def step(carry, xs_):
+            t = xs_[-1]
+            new, h_t = _mlstm_step(carry, xs_[:-1])
+            return _mask_carry(new, carry, t < t_valid), h_t
 
-    state, hs = jax.lax.scan(step, state, seq)
-    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, di).astype(x.dtype)
+        state, hs = jax.lax.scan(step, state, seq)
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, T, di).astype(x.dtype)
     y = (h * jax.nn.silu(z)) @ p["down"]
     return y, state
 
@@ -262,15 +272,21 @@ def slstm_paged_step(p, cfg: ModelConfig, x, state, t_valid):
     di, H, dh = _dims(cfg)
     xi = x @ p["up"]
     wx = xi @ p["W"]                                        # (B,T,4di)
-    seq = (jnp.moveaxis(wx, 1, 0), jnp.arange(T, dtype=jnp.int32))
+    if T == 1:
+        # megastep fast path: one direct _slstm_step for decode bursts
+        new = _slstm_step(p, cfg, wx[:, 0], state)
+        state = _mask_carry(new, state, t_valid > 0)
+        h = new[0][:, None].astype(x.dtype)                 # (B,1,di)
+    else:
+        seq = (jnp.moveaxis(wx, 1, 0), jnp.arange(T, dtype=jnp.int32))
 
-    def step(st, xs_):
-        wx_t, t = xs_
-        new = _slstm_step(p, cfg, wx_t, st)
-        return _mask_carry(new, st, t < t_valid), new[0]
+        def step(st, xs_):
+            wx_t, t = xs_
+            new = _slstm_step(p, cfg, wx_t, st)
+            return _mask_carry(new, st, t < t_valid), new[0]
 
-    state, hs = jax.lax.scan(step, state, seq)
-    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B,T,di)
+        state, hs = jax.lax.scan(step, state, seq)
+        h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)          # (B,T,di)
     return h @ p["down"], state
 
 

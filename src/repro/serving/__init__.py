@@ -1,10 +1,14 @@
 from .engine import ServeEngine, GenerationResult
-from .kv_cache import (BlockAllocator, CacheFullError, ROOT_DIGEST,
-                       StateStore, chain_digest, paged_gather, paged_scatter)
-from .steps import (make_prefill_step, make_decode_step, make_slot_sampler,
-                    sample_logits)
+from .kv_cache import (BlockAllocator, CacheFullError, DeviceSlotState,
+                       ROOT_DIGEST, StateStore, chain_digest, paged_gather,
+                       paged_scatter)
+from .steps import (make_prefill_step, make_decode_step, make_dense_burst,
+                    make_paged_burst, make_paged_mixed_step,
+                    make_sampler_core, make_slot_sampler, sample_logits)
 
 __all__ = ["ServeEngine", "GenerationResult", "BlockAllocator",
-           "CacheFullError", "ROOT_DIGEST", "StateStore", "chain_digest",
-           "paged_gather", "paged_scatter", "make_prefill_step",
-           "make_decode_step", "make_slot_sampler", "sample_logits"]
+           "CacheFullError", "DeviceSlotState", "ROOT_DIGEST", "StateStore",
+           "chain_digest", "paged_gather", "paged_scatter",
+           "make_prefill_step", "make_decode_step", "make_dense_burst",
+           "make_paged_burst", "make_paged_mixed_step", "make_sampler_core",
+           "make_slot_sampler", "sample_logits"]

@@ -73,6 +73,23 @@ Slot ``b``'s key for its ``t``-th generated token is
 the request and step, independent of serving mode, batch composition,
 or join timing — so paged and dense serving emit identical token
 streams for the same seed.
+
+**Device-resident decode loop** — the hot path never round-trips per
+token.  All per-step slot state (page tables, lengths, last tokens,
+per-slot ``(rid, step)`` sampling counters, done flags) lives in
+persistent device arrays (``DeviceSlotState``) that are mutated in-jit
+by one fused **megastep** — model step + sampler + token/length/eos
+update, donated buffers — and only rebuilt from the host after a
+*structural* event (admission, eviction, block extension, COW fork).
+When no admissions, prefill chunks, or forks are pending, the engine
+runs **decode bursts**: up to ``burst`` megasteps per host round-trip
+in one ``lax.while_loop`` with an all-done early-out, draining sampled
+tokens from a device-side ring buffer once per burst — host syncs per
+decoded token drop from ~4 to ``1/K``.  Whenever the request queue is
+non-empty the engine degrades to ``K = 1`` so join latency is
+unchanged; the burst bound is a *traced* scalar, so every K runs the
+same compiled loop body and burst output is bit-identical to
+single-stepping by construction.
 """
 from __future__ import annotations
 
@@ -87,8 +104,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kv_cache import (ROOT_DIGEST, BlockAllocator, CacheFullError,
-                       StateStore, chain_digest)
-from .steps import make_decode_step, make_prefill_step, make_slot_sampler
+                       DeviceSlotState, StateStore, chain_digest)
+from .steps import (make_decode_step, make_dense_burst, make_paged_burst,
+                    make_paged_mixed_step, make_prefill_step,
+                    make_sampler_core)
 
 
 @dataclasses.dataclass
@@ -152,7 +171,7 @@ class ServeEngine:
                  num_blocks: Optional[int] = None, prefill_chunk: int = 32,
                  share_prefix: Optional[bool] = None,
                  num_state_slots: Optional[int] = None,
-                 trace_logits: bool = False):
+                 burst: int = 1, trace_logits: bool = False):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -184,16 +203,26 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(model, capacity, cache_dtype),
                                 static_argnames=())
         self._decode = jax.jit(make_decode_step(model, greedy=True))
-        # both modes draw tokens through this one jitted sampler, so a
-        # given (seed, request, step) yields the same token either way
-        self._sample = make_slot_sampler(seed, greedy=self._greedy,
-                                         temperature=temperature or 1.0,
-                                         top_k=top_k)
+        # both modes draw tokens through one sampler core, so a given
+        # (seed, request, step) yields the same token either way; the
+        # core is inlined into the fused megasteps, and also jitted
+        # standalone for the dense admission path
+        sampler = make_sampler_core(seed, greedy=self._greedy,
+                                    temperature=temperature or 1.0,
+                                    top_k=top_k)
+        self._sample = jax.jit(sampler)
+        # decode bursts: up to `burst` fused megasteps per host
+        # round-trip.  `max_burst` (= the init value) sizes the ring
+        # buffers and is static; `self.burst` may be lowered at runtime
+        # and is traced, so every K <= max_burst runs one compilation.
+        if burst < 1:
+            raise ValueError(f"burst must be >= 1, got {burst}")
+        self.max_burst = int(burst)
+        self.burst = int(burst)
         # request queue + in-flight slot map
         self._pending: collections.deque = collections.deque()
         self._slots: List[Optional[_Slot]] = [None] * batch_size
         self._cache = None
-        self._token = None            # (B, 1) int32 — last token per slot
         self._pos = 0                 # shared aligned decode position
         self._batch_axes = None       # cache pytree of batch-axis indices
         self._lock = threading.Lock()
@@ -239,10 +268,6 @@ class ServeEngine:
         self._pool_epoch = 0          # bumped on release/register: a queued
         #                               request's cached prefix match stays
         #                               valid while this is unchanged
-        # donate the cache: the pool is rewritten every tick, and without
-        # donation XLA copies all num_blocks*block_size K/V per token
-        self._paged_fn = jax.jit(model.paged_step, donate_argnums=(1,)) \
-            if self.paged else None
         copy_fn = getattr(model, "copy_paged_block", _generic_copy_paged_block)
         self._copy_block = jax.jit(copy_fn, donate_argnums=(0,)) \
             if self.paged else None
@@ -250,6 +275,33 @@ class ServeEngine:
         # optional per-request logit recording (conformance tests)
         self.trace_logits = trace_logits
         self.logit_trace: Dict[int, List[np.ndarray]] = {}
+        # fused megasteps: model step + sampler + slot-state update in
+        # one jit, cache AND slot state donated — the pool is rewritten
+        # every tick, and without donation XLA copies all
+        # num_blocks*block_size K/V per token
+        if self.paged:
+            self._mixed_fn = jax.jit(
+                make_paged_mixed_step(model, sampler, eos_id=eos_id,
+                                      max_new=max_new_tokens,
+                                      capacity=capacity),
+                donate_argnums=(1, 2))
+            self._burst_fn = jax.jit(
+                make_paged_burst(model, sampler, eos_id=eos_id,
+                                 max_new=max_new_tokens, capacity=capacity,
+                                 k_static=self.max_burst,
+                                 trace=trace_logits),
+                donate_argnums=(1, 2))
+        else:
+            self._mixed_fn = None
+            self._burst_fn = jax.jit(
+                make_dense_burst(model, sampler, eos_id=eos_id,
+                                 max_new=max_new_tokens,
+                                 k_static=self.max_burst,
+                                 trace=trace_logits),
+                donate_argnums=(1, 2))
+        # device-resident slot state: uploaded only after structural
+        # host mutations, otherwise mutated in-jit and adopted back
+        self._dev = DeviceSlotState()
         # scheduler counters
         self.n_batches = 0            # prefill launches (back-compat alias)
         self.n_requests = 0
@@ -260,6 +312,11 @@ class ServeEngine:
         self.n_prefix_hits = 0        # paged: admissions that mapped blocks
         self.n_shared_tokens = 0      # prompt tokens served from shared blocks
         self.n_cow_forks = 0          # shared blocks forked before a write
+        # decode-loop counters (see loop_stats())
+        self.n_bursts = 0             # burst launches (>= 1 device step each)
+        self.n_device_steps = 0       # fused megasteps executed on device
+        self.n_host_syncs = 0         # decode-loop device->host drains
+        self.n_burst_early_exits = 0  # bursts cut short by all-done
 
     # -- synchronous fixed batch API (kept for benchmarks/back-compat) ------
     def generate_batch(self, prompts: np.ndarray,
@@ -326,8 +383,40 @@ class ServeEngine:
             stats["n_state_live"] = s["n_live"]
         return stats
 
+    def loop_stats(self) -> Dict[str, int]:
+        """Decode-loop efficiency counters: device steps vs host drains
+        vs state uploads.  ``n_host_syncs / n_device_steps`` is the
+        host-syncs-per-token figure the burst mode drives toward 1/K;
+        ``n_state_uploads`` counts host->device slot-state rebuilds
+        (structural events only — steady decode adds none)."""
+        return {"burst": self.burst, "max_burst": self.max_burst,
+                "n_bursts": self.n_bursts,
+                "n_device_steps": self.n_device_steps,
+                "n_host_syncs": self.n_host_syncs,
+                "n_burst_early_exits": self.n_burst_early_exits,
+                "n_state_uploads": self._dev.n_uploads}
+
+    def compile_stats(self) -> Dict[str, int]:
+        """Compilation counts of the jitted hot-path functions.  The
+        burst megastep must compile exactly once per engine (its K
+        bound is traced); the mixed megastep once (T is pinned to
+        ``prefill_chunk``).  CI asserts these to catch silent recompile
+        regressions."""
+        out = {}
+        for name, fn in (("megastep_burst", self._burst_fn),
+                         ("megastep_mixed", self._mixed_fn),
+                         ("prefill", self._prefill)):
+            if fn is None:
+                continue
+            try:
+                out[name] = fn._cache_size()
+            except AttributeError:      # older jax: no cache introspection
+                pass
+        return out
+
     def step(self) -> List[GenerationResult]:
-        """Admit what fits, run one decode step, evict what finished.
+        """Admit what fits, run one decode burst (or a mixed
+        prefill+decode megastep), evict what finished.
 
         Returns results for requests that completed during this step.
         """
@@ -343,30 +432,20 @@ class ServeEngine:
                 if slot is not None:
                     slot.done = True
             return finished + self._evict()
-        token, logits, cache = self._decode(self.params, self._cache,
-                                            self._token, jnp.int32(self._pos))
-        self._cache = cache
-        self._pos += 1
-        if self._greedy:
-            self._token = token
-            tok = np.asarray(token[:, 0])
-        else:
-            rows = {i: (s.rid, len(s.tokens))
-                    for i, s in enumerate(self._slots)
-                    if s is not None and not s.done}
-            tok = self._sample_rows(logits, rows)
-            self._token = jnp.asarray(tok, jnp.int32)[:, None]
-        logits_np = np.asarray(logits) if self.trace_logits else None
-        for i, slot in enumerate(self._slots):
-            if slot is None or slot.done:
-                continue
-            if self.trace_logits:
-                self.logit_trace.setdefault(slot.rid, []).append(
-                    logits_np[i].copy())
-            slot.tokens.append(int(tok[i]))
-            if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
-                    or len(slot.tokens) >= self.max_new_tokens):
-                slot.done = True
+        with self._lock:
+            pending = bool(self._pending)
+        # queue non-empty -> single-step so the next eviction admits at
+        # once; otherwise burst, capped at the cache strip's remainder
+        k = 1 if pending else min(self.burst, self.max_burst)
+        k = max(1, min(k, self.capacity - self._pos))
+        st = self._dev.device(self._dense_state)
+        out = self._burst_fn(self.params, self._cache, st,
+                             jnp.int32(self._pos), np.int32(k))
+        self._cache = out[0]
+        self._dev.adopt(out[1])
+        self._drain_burst(out[2], out[3],
+                          out[4] if self.trace_logits else None,
+                          k=k, paged=False)
         return finished + self._evict()
 
     def serve(self, requests: List[np.ndarray],
@@ -403,24 +482,98 @@ class ServeEngine:
         return fn
 
     # -- sampling -----------------------------------------------------------
-    def _sample_rows(self, logits,
-                     rows: Dict[int, Tuple[int, int]]) -> np.ndarray:
-        """Draw one token per batch row through the shared sampler.
-
-        ``rows`` maps batch row -> (request id, generation step); the
-        per-row key is derived from those inside the jitted sampler, so
-        a slot's draw is a pure function of (seed, request, step) —
-        serving-mode independent.  Rows absent from ``rows`` get
-        (0, 0); callers only consume rows they supplied (greedy mode
-        ignores them entirely)."""
-        rids = np.zeros((self.batch_size,), np.int32)
-        steps = np.zeros((self.batch_size,), np.int32)
-        for i, (rid, t) in rows.items():
-            rids[i] = rid
-            steps[i] = t
+    def _sample_rows(self, logits, rids: np.ndarray,
+                     steps: np.ndarray) -> np.ndarray:
+        """Draw one token per batch row through the shared sampler
+        (admission path only — the decode loop samples inside the fused
+        megastep).  ``rids``/``steps`` are (B,) int32 vectors; the
+        per-row key is derived from them inside the jit, so a slot's
+        draw is a pure function of (seed, request, step) —
+        serving-mode independent.  Idle rows carry (0, 0); callers only
+        consume rows they populated (greedy ignores them entirely)."""
         return np.asarray(self._sample(jnp.asarray(logits),
-                                       jnp.asarray(rids),
-                                       jnp.asarray(steps)))
+                                       jnp.asarray(rids, dtype=jnp.int32),
+                                       jnp.asarray(steps, dtype=jnp.int32)))
+
+    # -- device-resident slot state -----------------------------------------
+    def _dense_state(self) -> Dict[str, np.ndarray]:
+        """Host rebuild of the dense-mode device state (dirty path)."""
+        B = self.batch_size
+        tokens = np.zeros((B,), np.int32)
+        rids = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            rids[i] = s.rid
+            steps[i] = len(s.tokens)
+            if s.tokens:
+                tokens[i] = s.tokens[-1]
+            active[i] = not s.done
+        return {"tokens": tokens, "rids": rids, "steps": steps,
+                "active": active}
+
+    def _paged_state(self) -> Dict[str, np.ndarray]:
+        """Host rebuild of the paged-mode device state (dirty path)."""
+        B = self.batch_size
+        tokens = np.zeros((B,), np.int32)
+        rids = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            rids[i] = s.rid
+            steps[i] = len(s.tokens)
+            if s.tokens:
+                tokens[i] = s.tokens[-1]
+            # decoding = prefill complete, first token sampled, not done,
+            # cache strip not exhausted (the burst body writes at
+            # `lengths` before its own done check, so an active row must
+            # always have room for one token)
+            active[i] = (not s.done and s.prefill_off >= len(s.prompt)
+                         and len(s.tokens) > 0
+                         and int(self._lengths[i]) < self.capacity)
+        return {"tokens": tokens, "rids": rids, "steps": steps,
+                "active": active, "page_table": self._page_table,
+                "lengths": self._lengths, "state_slots": self._state_slots}
+
+    def _drain_burst(self, tok_buf, val_buf, logit_buf, *, k: int,
+                     paged: bool) -> None:
+        """One host sync per burst: fetch the token ring buffer, append
+        tokens to their slots, and replay the in-jit done rule (eos /
+        max_new / cache exhausted) so the host mirror stays coherent
+        with the device's ``active`` flags."""
+        bufs = (tok_buf, val_buf) if logit_buf is None \
+            else (tok_buf, val_buf, logit_buf)
+        got = jax.device_get(bufs)
+        self.n_host_syncs += 1
+        toks, valid = got[0], got[1]
+        logits = got[2] if logit_buf is not None else None
+        n_steps = int(valid.any(axis=1).sum())
+        self.n_bursts += 1
+        self.n_device_steps += n_steps
+        if n_steps < k:
+            self.n_burst_early_exits += 1
+        for kstep in range(n_steps):
+            for i, slot in enumerate(self._slots):
+                if slot is None or not valid[kstep, i]:
+                    continue
+                if logits is not None:
+                    self.logit_trace.setdefault(slot.rid, []).append(
+                        logits[kstep, i].copy())
+                slot.tokens.append(int(toks[kstep, i]))
+                if paged:
+                    self._lengths[i] += 1
+                if ((self.eos_id is not None
+                     and slot.tokens[-1] == self.eos_id)
+                        or len(slot.tokens) >= self.max_new_tokens
+                        or (paged
+                            and int(self._lengths[i]) >= self.capacity)):
+                    slot.done = True
+        if not paged:
+            self._pos += n_steps
 
     # -- scheduler internals ------------------------------------------------
     def _admit(self) -> None:
@@ -465,18 +618,17 @@ class ServeEngine:
             first_np = np.asarray(jnp.argmax(logits, axis=-1)
                                   .astype(jnp.int32))
         else:
-            first_np = self._sample_rows(
-                logits, {slot_i: (req.rid, 0) for slot_i, req in joins})
-        first = jnp.asarray(first_np, jnp.int32)[:, None]
+            rids = np.zeros((B,), np.int32)
+            for slot_i, req in joins:
+                rids[slot_i] = req.rid
+            first_np = self._sample_rows(logits, rids, np.zeros((B,), np.int32))
         self.n_prefills += 1
         self.n_batches += 1
         if fresh:
-            self._cache, self._token = cache, first
+            self._cache = cache
         else:
             slot_ids = [slot_i for slot_i, _ in joins]
             self._cache = self._splice_cache(self._cache, cache, slot_ids)
-            self._token = self._token.at[jnp.asarray(slot_ids), 0].set(
-                first[jnp.asarray(slot_ids), 0])
             self.n_joins += len(joins)
         logits_np = np.asarray(logits) if self.trace_logits else None
         for slot_i, req in joins:
@@ -485,6 +637,7 @@ class ServeEngine:
                     logits_np[slot_i].copy())
             self._slots[slot_i] = _Slot(req, first_np[slot_i], self.eos_id,
                                         self.max_new_tokens)
+        self._dev.mark_dirty()
 
     def _evict(self) -> List[GenerationResult]:
         out: List[GenerationResult] = []
@@ -504,14 +657,20 @@ class ServeEngine:
     def _step_paged(self) -> List[GenerationResult]:
         """One engine tick in paged mode.
 
-        A single batched ``paged_step`` call advances every busy slot:
-        decoding slots feed their last token (t_valid=1), slots still
-        prefilling feed their next ``prefill_chunk`` prompt tokens, idle
-        slots ride along masked out (t_valid=0).  T buckets to just two
-        shapes — 1 (pure decode) and ``prefill_chunk`` — so jit compiles
-        at most twice.  Before the step, any shared block in a slot's
-        write range is forked (COW); after it, newly completed pages are
-        published to the content table for future joiners.
+        While any slot is still consuming its prompt, one batched
+        *mixed* megastep advances every busy slot: decoding slots feed
+        their last token (t_valid=1), prefilling slots feed their next
+        ``prefill_chunk`` prompt tokens, idle slots ride along masked
+        out (t_valid=0).  Once the batch is pure decode, the engine
+        runs *bursts* instead: up to ``burst`` fused device steps per
+        host round-trip (K=1 whenever requests are queued, so the next
+        eviction admits immediately).  T therefore buckets to just two
+        shapes — 1 (burst body) and ``prefill_chunk`` — and the burst
+        bound is traced, so each megastep compiles exactly once.
+        Before any step, shared blocks in the coming write range are
+        forked (COW) and page tables pre-extended to cover it; after
+        it, newly completed pages are published to the content table
+        for future joiners.
         """
         self._admit_paged()
         finished = self._evict_paged()
@@ -524,10 +683,21 @@ class ServeEngine:
             self._paged_cache = self.model.init_paged_cache(
                 self.allocator.num_blocks, self.block_size,
                 dtype=self.cache_dtype, **kw)
-        prefilling = any(s.prefill_off < len(s.prompt) for _, s in busy)
-        T = self.prefill_chunk if prefilling else 1
+        if any(s.prefill_off < len(s.prompt) for _, s in busy):
+            self._step_paged_mixed(busy)
+        else:
+            self._step_paged_burst(busy)
+        if self.share_prefix:
+            for i, slot in busy:
+                self._register_full_pages(i, slot)
+        return finished + self._evict_paged()
+
+    def _step_paged_mixed(self, busy) -> None:
+        """One mixed prefill+decode megastep (T = ``prefill_chunk``)."""
+        T = self.prefill_chunk
         tokens = np.zeros((self.batch_size, T), np.int32)
         t_valid = np.zeros((self.batch_size,), np.int32)
+        emit = np.zeros((self.batch_size,), bool)
         for i, slot in busy:
             if slot.done:
                 continue
@@ -536,26 +706,34 @@ class ServeEngine:
                 tokens[i, :n] = slot.prompt[slot.prefill_off:
                                             slot.prefill_off + n]
                 t_valid[i] = n
+                emit[i] = slot.prefill_off + n >= len(slot.prompt)
             elif self._lengths[i] >= self.capacity:
                 slot.done = True      # cache strip exhausted: truncate
             else:
                 tokens[i, 0] = slot.tokens[-1]
                 t_valid[i] = 1
+                emit[i] = True
         if not t_valid.any():
-            return finished + self._evict_paged()
+            return
         for i, slot in busy:
             if t_valid[i]:
                 self._cow_write_range(i, slot, int(self._lengths[i]),
                                       int(t_valid[i]))
                 self._extend_blocks(i, slot,
                                     int(self._lengths[i]) + int(t_valid[i]))
-        logits, self._paged_cache = self._paged_fn(
-            self.params, self._paged_cache, jnp.asarray(tokens),
-            jnp.asarray(self._page_table), jnp.asarray(self._lengths),
-            jnp.asarray(t_valid), jnp.asarray(self._state_slots))
-        if prefilling:
-            self.n_prefill_chunks += 1
-        emit: Dict[int, _PagedSlot] = {}
+        st = self._dev.device(self._paged_state)
+        cache, st, sampled, logits = self._mixed_fn(
+            self.params, self._paged_cache, st, jnp.asarray(tokens),
+            jnp.asarray(t_valid), jnp.asarray(emit))
+        self._paged_cache = cache
+        self._dev.adopt(st)
+        self.n_prefill_chunks += 1
+        self.n_device_steps += 1
+        if self.trace_logits:
+            sampled_np, logits_np = jax.device_get((sampled, logits))
+        else:
+            sampled_np, logits_np = np.asarray(sampled), None
+        self.n_host_syncs += 1
         for i, slot in busy:
             if not t_valid[i]:
                 continue
@@ -567,26 +745,53 @@ class ServeEngine:
                     continue          # more chunks to go; no token yet
                 self.n_prefills += 1
                 self.n_batches += 1
-            emit[i] = slot
-        if emit:
-            # sample on the device logits; only the trace needs host copies
-            toks = self._sample_rows(
-                logits, {i: (s.rid, len(s.tokens)) for i, s in emit.items()})
-            logits_np = np.asarray(logits) if self.trace_logits else None
-            for i, slot in emit.items():
-                if self.trace_logits:
-                    self.logit_trace.setdefault(slot.rid, []).append(
-                        logits_np[i].copy())
-                slot.tokens.append(int(toks[i]))
-                if ((self.eos_id is not None
-                     and slot.tokens[-1] == self.eos_id)
-                        or len(slot.tokens) >= self.max_new_tokens):
-                    slot.done = True
-        if self.share_prefix:
-            for i, slot in busy:
-                if t_valid[i]:
-                    self._register_full_pages(i, slot)
-        return finished + self._evict_paged()
+            if self.trace_logits:
+                self.logit_trace.setdefault(slot.rid, []).append(
+                    logits_np[i].copy())
+            slot.tokens.append(int(sampled_np[i]))
+            # replay of the megastep's in-jit done rule
+            if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
+                    or len(slot.tokens) >= self.max_new_tokens
+                    or int(self._lengths[i]) >= self.capacity):
+                slot.done = True
+
+    def _step_paged_burst(self, busy) -> None:
+        """Up to ``burst`` pure-decode megasteps in one device loop.
+
+        Before launching, every active slot's page table is extended to
+        cover the burst's worst-case write range (drawn from the
+        admission-time reservation, so this can never fail) and any
+        shared block in that range is COW-forked — the loop then never
+        needs the host until its ring buffer is drained."""
+        with self._lock:
+            pending = bool(self._pending)
+        k = 1 if pending else min(self.burst, self.max_burst)
+        k = max(1, k)
+        any_active = False
+        for i, slot in busy:
+            if slot.done:
+                continue
+            L = int(self._lengths[i])
+            if L >= self.capacity:
+                slot.done = True      # cache strip exhausted: truncate
+                continue
+            # the burst writes at most k tokens, stops at max_new
+            # (final length = prompt + max_new - 1) and at capacity
+            target = min(L + k, len(slot.prompt) + self.max_new_tokens - 1,
+                         self.capacity)
+            if target > L:
+                self._cow_write_range(i, slot, L, target - L)
+                self._extend_blocks(i, slot, target)
+            any_active = True
+        if not any_active:
+            return
+        st = self._dev.device(self._paged_state)
+        out = self._burst_fn(self.params, self._paged_cache, st, np.int32(k))
+        self._paged_cache = out[0]
+        self._dev.adopt(out[1])
+        self._drain_burst(out[2], out[3],
+                          out[4] if self.trace_logits else None,
+                          k=k, paged=True)
 
     def _match_prefix(self, prompt: np.ndarray) \
             -> Tuple[List[int], List[bytes], int]:
@@ -702,6 +907,8 @@ class ServeEngine:
             self._page_table[slot_i, :len(blocks)] = blocks
             self._lengths[slot_i] = matched
             self._state_slots[slot_i] = slab
+        if joins:
+            self._dev.mark_dirty()
 
     def _extend_blocks(self, slot_i: int, slot: _PagedSlot,
                        n_tokens: int) -> None:
@@ -715,6 +922,7 @@ class ServeEngine:
             slot.reserve_left -= 1
             self._reserved -= 1
             self._page_table[slot_i, len(slot.blocks) - 1] = bid
+            self._dev.mark_dirty()
 
     def _cow_write_range(self, slot_i: int, slot: _PagedSlot, start: int,
                          n_new: int) -> None:
@@ -743,6 +951,7 @@ class ServeEngine:
         self._pool_epoch += 1
         slot.blocks[p] = new
         self._page_table[slot_i, p] = new
+        self._dev.mark_dirty()
         self.n_cow_forks += 1
 
     def _seq_tokens(self, slot: _PagedSlot, start: int,
@@ -787,6 +996,7 @@ class ServeEngine:
             self._page_table[i, :] = 0
             self._lengths[i] = 0
             self._slots[i] = None
+            self._dev.mark_dirty()
             self.n_evictions += 1
         return out
 

@@ -41,14 +41,16 @@ from __future__ import annotations
 
 import collections
 import hashlib
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, \
+    Tuple
 
 import numpy as np
 
 from ..models.attention import paged_gather, paged_scatter  # noqa: F401
 
-__all__ = ["BlockAllocator", "CacheFullError", "ROOT_DIGEST", "StateStore",
-           "chain_digest", "paged_gather", "paged_scatter"]
+__all__ = ["BlockAllocator", "CacheFullError", "DeviceSlotState",
+           "ROOT_DIGEST", "StateStore", "chain_digest", "paged_gather",
+           "paged_scatter"]
 
 # Chain root: the digest "before" a sequence's first page.
 ROOT_DIGEST = hashlib.sha256(b"repro.kv_cache.root").digest()
@@ -64,6 +66,59 @@ def chain_digest(parent: bytes, tokens: Sequence[int]) -> bytes:
 class CacheFullError(RuntimeError):
     """Raised by ``BlockAllocator.acquire`` when the pool cannot satisfy
     the request.  The allocator state is unchanged (all-or-nothing)."""
+
+
+class DeviceSlotState:
+    """Device-resident mirror of the engine's per-slot decode state.
+
+    The serving engine keeps two views of its slot arrays (page tables,
+    lengths, last tokens, sampling counters, done flags):
+
+      * **host mirror** — numpy arrays plus slot bookkeeping, mutated at
+        *structural* events only (admission, eviction, block extension,
+        COW fork);
+      * **device view** — a dict of jax arrays mutated exclusively
+        *in-jit* by the fused megastep/burst functions, donated through
+        every call.
+
+    This class owns the device view and the coherence protocol between
+    the two.  ``mark_dirty`` records a structural host mutation; the
+    next ``device(build)`` rebuilds the view from the host (one upload)
+    and clears the flag.  While clean, ``device`` returns the arrays
+    adopted from the last in-jit update (``adopt``) — **zero uploads on
+    the steady decode path**, which is what removes the per-token
+    ``jnp.asarray(page_table/lengths/...)`` re-upload the per-step host
+    loop paid.  ``n_uploads`` counts rebuilds so benchmarks and tests
+    can pin the no-re-upload property.
+    """
+
+    def __init__(self):
+        self._dev: Optional[Dict[str, "object"]] = None
+        self._dirty = True
+        self.n_uploads = 0
+
+    @property
+    def dirty(self) -> bool:
+        return self._dirty
+
+    def mark_dirty(self) -> None:
+        """Host mirror changed structurally: the device view is stale."""
+        self._dirty = True
+
+    def adopt(self, dev: Dict[str, "object"]) -> None:
+        """Adopt the state dict returned by an in-jit mutation as the
+        current device view (the previous view's buffers were donated
+        into that call and are dead)."""
+        self._dev = dev
+
+    def device(self, build: Callable[[], Dict[str, np.ndarray]]):
+        """Current device view; rebuilds from ``build()`` iff dirty."""
+        if self._dirty or self._dev is None:
+            import jax.numpy as jnp
+            self._dev = {k: jnp.asarray(v) for k, v in build().items()}
+            self._dirty = False
+            self.n_uploads += 1
+        return self._dev
 
 
 class StateStore:

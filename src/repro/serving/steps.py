@@ -7,6 +7,30 @@ Per-row keys are what make sampling reproducible across serving modes:
 the engine derives slot ``b``'s key from its request id and decode step
 only, so the same request draws the same tokens whether it is served by
 the dense or the block-paged engine, in whatever batch composition.
+
+The **megastep** builders fuse one whole engine tick into a single
+jitted function: model step + sampler + token/length/step/done-flag
+update, all operating on a dict of persistent device arrays the engine
+never rebuilds from Python between steps (see ``DeviceSlotState`` in
+``kv_cache.py``).  The *burst* variants run up to ``k_max`` fused
+decode steps per host round-trip inside one ``lax.while_loop`` with an
+all-done early-out, writing sampled tokens into a ``(k_static, B)``
+ring buffer the host drains once per burst.  ``k_max`` is a *traced*
+scalar, so one compilation serves every burst length — K = 1 and
+K = 8 run the identical compiled loop body, which is what makes burst
+output bit-identical to single-stepping by construction.
+
+Slot-state dict contract (all arrays device-resident, donated through
+every megastep call):
+
+  ``tokens (B,) int32``   last sampled token per slot (next decode input)
+  ``rids (B,) int32``     request id per slot (sampling key derivation)
+  ``steps (B,) int32``    tokens generated so far per slot
+  ``active (B,) bool``    slot is decoding (not idle / prefilling / done)
+  paged only:
+  ``page_table (B,P)``    logical page -> physical block per slot
+  ``lengths (B,) int32``  tokens cached per slot (true position)
+  ``state_slots (B,)``    recurrent state slab per slot
 """
 from __future__ import annotations
 
@@ -46,20 +70,19 @@ def sample_logits(logits, rng=None, *, greedy: bool = True,
     return jax.vmap(draw)(rng, l).astype(jnp.int32)
 
 
-def make_slot_sampler(seed: int = 0, *, greedy: bool = True,
+def make_sampler_core(seed: int = 0, *, greedy: bool = True,
                       temperature: float = 1.0,
                       top_k: Optional[int] = None):
-    """Jitted ``(logits, rids, steps) -> tokens`` used by the engine.
-
-    Row ``b``'s key — ``fold_in(fold_in(PRNGKey(seed), rids[b]),
-    steps[b])`` — is derived *inside* the jit, so the hot decode loop
-    ships two small int32 vectors instead of doing per-slot ``fold_in``
-    dispatches and device->host key syncs each token.  Both serving
-    modes draw through one of these, which is what makes paged and
-    dense token streams match for the same seed."""
+    """Traceable ``(logits, rids, steps) -> tokens`` — the sampler the
+    megasteps inline.  Row ``b``'s key — ``fold_in(fold_in(
+    PRNGKey(seed), rids[b]), steps[b])`` — is derived *inside* the
+    caller's jit, so the hot decode loop ships two small int32 vectors
+    instead of doing per-slot ``fold_in`` dispatches and device->host
+    key syncs each token.  Greedy (= temperature 0) is the same
+    function with the rng path compiled out."""
     if greedy:
-        return jax.jit(lambda logits, rids, steps:
-                       jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return lambda logits, rids, steps: \
+            jnp.argmax(logits, axis=-1).astype(jnp.int32)
     base = jax.random.PRNGKey(seed)
 
     def sample(logits, rids, steps):
@@ -67,7 +90,19 @@ def make_slot_sampler(seed: int = 0, *, greedy: bool = True,
         keys = jax.vmap(fold)(rids, steps)
         return sample_logits(logits, keys, greedy=False,
                              temperature=temperature, top_k=top_k)
-    return jax.jit(sample)
+    return sample
+
+
+def make_slot_sampler(seed: int = 0, *, greedy: bool = True,
+                      temperature: float = 1.0,
+                      top_k: Optional[int] = None):
+    """Jitted standalone ``(logits, rids, steps) -> tokens`` (the
+    engine's admission path; the decode loop samples inside the
+    megastep instead).  Both serving modes draw through the same core,
+    which is what makes paged and dense token streams match for the
+    same seed."""
+    return jax.jit(make_sampler_core(seed, greedy=greedy,
+                                     temperature=temperature, top_k=top_k))
 
 
 def make_decode_step(model, *, greedy: bool = True, temperature: float = 1.0,
@@ -80,3 +115,137 @@ def make_decode_step(model, *, greedy: bool = True, temperature: float = 1.0,
                             temperature=temperature, top_k=top_k)
         return nxt[:, None], logits, cache
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# fused megasteps: model step + sampler + slot-state update in one jit
+# ---------------------------------------------------------------------------
+
+def _advance(st, nxt, emit, t_valid, *, eos, max_new, capacity=None):
+    """Shared slot-state transition: fold one step's sampled tokens into
+    the device-resident state dict.  ``emit`` marks rows that produce a
+    token this step (decoding rows, or rows whose prefill completes);
+    ``t_valid`` is how many cache positions each row consumed.  The
+    done rule — eos hit, ``max_new`` generated, or (paged) the cache
+    strip exhausted — is evaluated *in-jit* so the host never has to
+    sync to learn a slot finished; the host replays the identical rule
+    on the drained tokens to keep its mirror coherent."""
+    steps = st["steps"] + emit.astype(jnp.int32)
+    done = (nxt == eos) | (steps >= max_new)
+    new = dict(st, tokens=jnp.where(emit, nxt, st["tokens"]), steps=steps)
+    if "lengths" in st:
+        lengths = st["lengths"] + t_valid
+        new["lengths"] = lengths
+        if capacity is not None:
+            done = done | (lengths >= capacity)
+    new["active"] = (st["active"] | emit) & ~(emit & done)
+    return new
+
+
+def make_paged_mixed_step(model, sampler, *, eos_id, max_new, capacity):
+    """Fused tick for mixed prefill+decode phases: ``tokens (B,T)`` /
+    ``t_valid`` / ``emit`` are host-built (prompt chunks are host
+    data), everything else lives in the donated state dict."""
+    eos = -1 if eos_id is None else int(eos_id)
+
+    def mixed_step(params, cache, st, tokens, t_valid, emit):
+        logits, cache = model.paged_step(
+            params, cache, tokens, st["page_table"], st["lengths"], t_valid,
+            st["state_slots"])
+        nxt = sampler(logits, st["rids"], st["steps"])
+        st = _advance(st, nxt, emit, t_valid, eos=eos, max_new=max_new,
+                      capacity=capacity)
+        return cache, st, nxt, logits
+    return mixed_step
+
+
+def _run_burst(cache, st, k_max, k_static, trace_aval, body_step):
+    """Shared burst scaffolding: run ``body_step(st, cache, i, emit) ->
+    (st, cache, nxt, logits)`` up to ``k_max`` (traced) times in one
+    ``lax.while_loop`` with the all-done early-out, ring-buffering
+    (token, valid[, logits]) per step.  Returns ``(cache, st, tok_buf,
+    val_buf[, logit_buf])``; ``tok_buf[k, b]`` is slot ``b``'s token
+    from burst step ``k`` (-1 and ``val_buf`` False where the slot
+    emitted nothing)."""
+    B = st["tokens"].shape[0]
+    carry = (jnp.int32(0), st, cache,
+             jnp.full((k_static, B), -1, jnp.int32),
+             jnp.zeros((k_static, B), bool))
+    if trace_aval is not None:
+        carry += (jnp.zeros((k_static,) + trace_aval.shape,
+                            trace_aval.dtype),)
+
+    def cond(c):
+        return (c[0] < k_max) & jnp.any(c[1]["active"])
+
+    def body(c):
+        i, st, cache = c[0], c[1], c[2]
+        emit = st["active"]
+        st, cache, nxt, logits = body_step(st, cache, i, emit)
+        out = (i + 1, st, cache,
+               c[3].at[i].set(jnp.where(emit, nxt, -1)),
+               c[4].at[i].set(emit))
+        if trace_aval is not None:
+            out += (c[5].at[i].set(logits),)
+        return out
+
+    out = jax.lax.while_loop(cond, body, carry)
+    return (out[2], out[1]) + out[3:]
+
+
+def make_paged_burst(model, sampler, *, eos_id, max_new, capacity,
+                     k_static: int, trace: bool = False):
+    """Device-resident decode burst through the paged cache: up to
+    ``k_max`` fused (paged_step + sample + state update) iterations per
+    host round-trip, in one ``lax.while_loop`` with an all-done
+    early-out.  The host must have pre-extended every active slot's
+    page table to cover ``lengths + k_max`` writes (drawing on the
+    admission-time reservation) and COW-forked any shared block in that
+    range before calling.  Output contract: see ``_run_burst``."""
+    eos = -1 if eos_id is None else int(eos_id)
+
+    def burst(params, cache, st, k_max):
+        trace_aval = jax.eval_shape(
+            model.paged_step, params, cache, st["tokens"][:, None],
+            st["page_table"], st["lengths"],
+            st["active"].astype(jnp.int32), st["state_slots"])[0] \
+            if trace else None
+
+        def body_step(st, cache, i, emit):
+            t_valid = emit.astype(jnp.int32)
+            logits, cache = model.paged_step(
+                params, cache, st["tokens"][:, None], st["page_table"],
+                st["lengths"], t_valid, st["state_slots"])
+            nxt = sampler(logits, st["rids"], st["steps"])
+            st = _advance(st, nxt, emit, t_valid, eos=eos, max_new=max_new,
+                          capacity=capacity)
+            return st, cache, nxt, logits
+
+        return _run_burst(cache, st, k_max, k_static, trace_aval, body_step)
+    return burst
+
+
+def make_dense_burst(model, sampler, *, eos_id, max_new,
+                     k_static: int, trace: bool = False):
+    """Dense-cache decode burst: all slots share one scalar position
+    ``pos`` (the host advances its mirror by the number of steps the
+    loop actually ran).  The host caps ``k_max`` at ``capacity - pos``
+    so the loop can never write past the cache strip.  Output
+    contract: see ``_run_burst``."""
+    eos = -1 if eos_id is None else int(eos_id)
+
+    def burst(params, cache, st, pos, k_max):
+        trace_aval = jax.eval_shape(model.decode_step, params, cache,
+                                    st["tokens"][:, None], pos)[0] \
+            if trace else None
+
+        def body_step(st, cache, i, emit):
+            logits, cache = model.decode_step(params, cache,
+                                              st["tokens"][:, None], pos + i)
+            nxt = sampler(logits, st["rids"], st["steps"])
+            st = _advance(st, nxt, emit, emit.astype(jnp.int32),
+                          eos=eos, max_new=max_new)
+            return st, cache, nxt, logits
+
+        return _run_burst(cache, st, k_max, k_static, trace_aval, body_step)
+    return burst

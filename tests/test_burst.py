@@ -1,0 +1,257 @@
+"""Burst == single-step conformance for the device-resident decode loop.
+
+The engine's decode burst runs up to K fused megasteps per host
+round-trip inside one ``lax.while_loop`` whose bound is a *traced*
+scalar — every K executes the identical compiled loop body, so burst
+output must be **bit-identical** to single-stepping, across the whole
+serving-family matrix (transformer / mamba / xLSTM / hybrid):
+
+  * tokens AND logit traces for K in {1, 4, 8} match element-for-element
+    (the engines share one ``max_burst`` so all runs execute the same
+    compiled functions);
+  * a mid-decode join forces the burst back to K = 1 while the queue is
+    non-empty (join latency unchanged) and the joiner still decodes the
+    fresh-run oracle sequence;
+  * the all-done early-out cuts the final burst short instead of
+    spinning no-op device steps;
+  * the megasteps compile exactly once per (engine, T-bucket) — the CI
+    job pins this to catch silent recompile regressions;
+  * steady-state decode performs **zero** host->device slot-state
+    uploads (the device-resident mirror replaces the per-step
+    ``jnp.asarray(page_table/lengths/...)`` re-upload).
+
+The dense engine runs the same burst machinery (shared position
+scalar), checked via its own K-sweep.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import FAMILY_CFGS
+from repro.serving import ServeEngine
+
+
+def _serve_with_burst(model, params, prompts, k, *, trace=False, **kw):
+    """Serve ``prompts`` with burst bound ``k`` on a max_burst=8 engine
+    (shared ring-buffer shape: every K runs the same compiled loop)."""
+    kw.setdefault("batch_size", len(prompts))
+    kw.setdefault("capacity", 32)
+    kw.setdefault("max_new_tokens", 8)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 8)
+    eng = ServeEngine(model, params, burst=8, trace_logits=trace, **kw)
+    eng.burst = k
+    res = eng.serve([p.copy() for p in prompts])
+    toks = {r.request_id: list(r.tokens) for r in res}
+    return eng, toks
+
+
+def _fresh_dense_tokens(model, params, prompt, max_new):
+    import jax.numpy as jnp
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None],
+                                  capacity=64, cache_dtype=jnp.float32)
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    while len(toks) < max_new:
+        tok = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, cache, tok, jnp.int32(pos))
+        toks.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return toks
+
+
+def test_burst_tokens_and_traces_bit_identical(family_model):
+    """K in {1, 4, 8}: same tokens, same logit traces, bit for bit.
+
+    All requests are submitted up front so every run schedules the same
+    sequence of jit shapes (same admissions, same prefill chunks); from
+    then on every T=1 step goes through the shared burst body, so any
+    divergence is semantic, not numeric noise."""
+    family, model, params = family_model
+    rng = np.random.default_rng(61)
+    prompts = [rng.integers(1, 64, n).astype(np.int32) for n in (5, 9, 3)]
+    runs = {}
+    for k in (1, 4, 8):
+        eng, toks = _serve_with_burst(model, params, prompts, k, trace=True)
+        runs[k] = (eng, toks)
+    base_eng, base_toks = runs[1]
+    for k in (4, 8):
+        eng, toks = runs[k]
+        assert toks == base_toks, f"{family}: K={k} tokens diverged from K=1"
+        assert set(eng.logit_trace) == set(base_eng.logit_trace)
+        for rid, base_trace in base_eng.logit_trace.items():
+            trace = eng.logit_trace[rid]
+            assert len(trace) == len(base_trace), (family, k, rid)
+            for step, (a, b) in enumerate(zip(trace, base_trace)):
+                assert np.array_equal(a, b), \
+                    f"{family}: K={k} logits diverged (rid {rid}, step {step})"
+    # burst mode actually batched host round-trips: fewer syncs, same steps
+    eng8 = runs[8][0]
+    assert eng8.n_device_steps == base_eng.n_device_steps
+    assert eng8.n_host_syncs < base_eng.n_host_syncs
+
+
+def test_burst_matches_greedy_oracle(family_model):
+    """K=8 burst output equals a fresh dense greedy run per request."""
+    family, model, params = family_model
+    rng = np.random.default_rng(67)
+    prompts = [rng.integers(1, 64, n).astype(np.int32) for n in (6, 4)]
+    _, toks = _serve_with_burst(model, params, prompts, 8)
+    for rid, p in enumerate(prompts):
+        assert toks[rid] == _fresh_dense_tokens(model, params, p, 8), family
+
+
+def test_midjoin_forces_single_step_then_burst_resumes(family_model):
+    """A request queued mid-decode (both slots busy) degrades the loop
+    to K=1 — so the very next eviction admits it — and every request
+    still decodes its fresh-run oracle sequence."""
+    family, model, params = family_model
+    rng = np.random.default_rng(71)
+    a = rng.integers(1, 64, 5).astype(np.int32)
+    # b's prompt spans two prefill chunks, so b finishes one tick after
+    # a — the late request then joins while b is still in flight
+    b = rng.integers(1, 64, 9).astype(np.int32)
+    late = rng.integers(1, 64, 7).astype(np.int32)
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=12, block_size=4, prefill_chunk=8,
+                      burst=8)
+    assert eng.paged, family
+    eng.submit(a)
+    eng.submit(b)
+    results = []
+    while eng.n_prefills < 2:          # consume both prompts (mixed steps)
+        results += eng.step()
+    results += eng.step()              # one full-K burst, queue empty
+    assert eng.n_bursts == 1
+    steps_before = eng.n_device_steps
+    assert eng.n_device_steps - eng.n_prefill_chunks > 1  # really burst
+    eng.submit(late)                   # queued: both slots busy
+    results += eng.step()              # burst must degrade to K=1
+    assert eng.n_device_steps == steps_before + 1, \
+        f"{family}: engine kept bursting with a request queued"
+    assert eng.n_active == 2           # the joiner is still waiting
+    while eng.has_work:
+        results += eng.step()
+    assert eng.n_joins >= 1            # late joined once a slot freed
+    by_id = {r.request_id: list(r.tokens) for r in results}
+    for rid, prompt in ((0, a), (1, b), (2, late)):
+        assert by_id[rid] == _fresh_dense_tokens(model, params, prompt, 12), \
+            (family, rid)
+    # after the joiner finished prefilling, full bursts resumed
+    assert eng.n_bursts >= 2
+    assert eng.n_device_steps > eng.n_bursts  # not all ticks were K=1
+
+
+def test_burst_early_exit_on_all_done(family_model):
+    """When every slot finishes mid-burst the while_loop exits instead
+    of running no-op device steps to the K bound."""
+    family, model, params = family_model
+    rng = np.random.default_rng(73)
+    prompts = [rng.integers(1, 64, 5).astype(np.int32)]
+    # max_new=6: after prefill emits token 1, exactly 5 decode steps
+    # remain — an 8-bound burst must exit early at 5
+    eng, toks = _serve_with_burst(model, params, prompts, 8,
+                                  max_new_tokens=6)
+    assert len(toks[0]) == 6
+    assert eng.n_burst_early_exits >= 1, family
+    assert eng.n_device_steps < eng.n_bursts * 8
+
+
+def test_megasteps_compile_once_across_k(family_model):
+    """One engine, K swept over {1, 4, 8} with joins in between: the
+    burst megastep must compile exactly once (its K bound is traced)
+    and the mixed megastep once (T pinned to prefill_chunk)."""
+    family, model, params = family_model
+    rng = np.random.default_rng(79)
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=6, block_size=4, prefill_chunk=8,
+                      burst=8)
+    for k in (1, 4, 8):
+        eng.burst = k
+        eng.serve([rng.integers(1, 64, n).astype(np.int32)
+                   for n in (5, 9, 3)])   # 3 reqs / 2 slots: joins happen
+    stats = eng.compile_stats()
+    assert stats["megastep_burst"] == 1, stats
+    assert stats["megastep_mixed"] == 1, stats
+
+
+def test_steady_state_decode_uploads_nothing(family_model):
+    """The device-resident mirror: once a slot is decoding (and no
+    structural event — admission, eviction, extension, fork — occurs),
+    repeated decode bursts must not re-upload any slot state."""
+    family, model, params = family_model
+    prompt = np.arange(1, 5, dtype=np.int32)
+    # block_size 16 >> prompt+max_new: no block extension mid-decode
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=10, block_size=16, prefill_chunk=8,
+                      burst=1)
+    eng.submit(prompt)
+    while eng.n_prefills < 1:
+        eng.step()
+    uploads = eng._dev.n_uploads
+    for _ in range(5):                 # pure steady-state decode ticks
+        eng.step()
+    assert eng._dev.n_uploads == uploads, \
+        f"{family}: steady-state decode re-uploaded slot state"
+    assert eng.n_device_steps >= 5
+
+
+def test_dense_burst_matches_single_step():
+    """The dense engine shares the burst machinery: K sweep on a dense
+    (paged=False) transformer must be token- and trace-identical."""
+    model_cfg = FAMILY_CFGS["transformer"]
+    from repro.models import build_model
+    model = build_model(model_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(83)
+    # equal lengths: one un-padded prefill wave, pure decode after
+    prompts = [rng.integers(1, 64, 6).astype(np.int32) for _ in range(3)]
+    runs = {}
+    for k in (1, 4, 8):
+        eng = ServeEngine(model, params, batch_size=3, capacity=32,
+                          max_new_tokens=8, paged=False, burst=8,
+                          trace_logits=True)
+        assert not eng.paged
+        eng.burst = k
+        res = eng.serve([p.copy() for p in prompts])
+        runs[k] = (eng, {r.request_id: list(r.tokens) for r in res})
+    base_eng, base_toks = runs[1]
+    for k in (4, 8):
+        eng, toks = runs[k]
+        assert toks == base_toks, f"dense K={k} tokens diverged"
+        for rid, base_trace in base_eng.logit_trace.items():
+            for step, (a, b) in enumerate(zip(eng.logit_trace[rid],
+                                              base_trace)):
+                assert np.array_equal(a, b), (k, rid, step)
+    assert runs[8][0].n_host_syncs < base_eng.n_host_syncs
+
+
+def test_dense_burst_respects_eos_and_capacity():
+    """Dense bursts stop at eos per slot and never write past the cache
+    strip (the host caps K at capacity - pos)."""
+    from repro.models import build_model
+    model = build_model(FAMILY_CFGS["transformer"])
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(89)
+    prompts = [rng.integers(1, 64, 6).astype(np.int32) for _ in range(2)]
+    oracle = _fresh_dense_tokens(model, params, prompts[0], 24)
+    eos = oracle[3]                    # forces an early per-slot stop
+    eng = ServeEngine(model, params, batch_size=2, capacity=16,
+                      max_new_tokens=24, paged=False, burst=8,
+                      eos_id=eos)
+    res = eng.serve([p.copy() for p in prompts])
+    by_id = {r.request_id: list(r.tokens) for r in res}
+    expected = oracle[:oracle.index(eos) + 1]
+    assert by_id[0] == expected        # stopped at eos inside a burst
+    # capacity 16, prompts len 6: at most 10 decode positions — every
+    # request is truncated there even though max_new is 24
+    assert all(len(t) <= 11 for t in by_id.values())
+    assert eng._pos <= 16
+
+
+def test_burst_rejects_bad_config():
+    from repro.models import build_model
+    model = build_model(FAMILY_CFGS["transformer"])
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="burst"):
+        ServeEngine(model, params, burst=0)
