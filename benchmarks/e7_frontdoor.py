@@ -1,0 +1,150 @@
+"""E7 — the tensor-query front door under open-loop load.
+
+A loopback ``TensorQueryServer`` (serversrc ! batcher ! queue[workers]
+! engine-filter ! unbatcher ! serversink) serves a paged ServeEngine
+while two client populations hit it concurrently:
+
+  * **batch lane** — Poisson open-loop arrivals (fixed-seed exponential
+    gaps, submitted on schedule regardless of completions), the bulk
+    work that keeps every slot busy;
+  * **interactive lane** — sparse probes whose *time to first token*
+    is the SLO.  The scheduler admits them ahead of queued batch work
+    and preempts running batch slots when the pool is full, so their
+    TTFT must stay bounded while batch TTFT absorbs the queueing.
+
+Reported per lane: p50/p99 TTFT (measured at the client from the
+streamed TOKENS frames), plus median time-per-output-token and total
+goodput.  The asserted headline: interactive p99 TTFT under the batch
+p99 — priority scheduling visible end-to-end through the socket.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+BATCH_SLOTS = 4
+MAX_NEW = 32
+PROMPT_LEN = 12
+CAPACITY = 48
+LOAD_S = 10.0              # open-loop window
+BATCH_RATE = 50.0          # Poisson batch arrivals / s (saturating)
+PROBE_GAP_S = 0.5          # interactive probe spacing
+
+
+def _cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(
+        arch_id="e7-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+        norm="rmsnorm", mlp_act="swiglu", rope="rope",
+        param_dtype="float32", compute_dtype="float32")
+
+
+def _percentile_us(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q) * 1e6)
+
+
+def _submit_open_loop(client, rng, lane: str, gaps: List[float],
+                      vocab: int, out: List[int]) -> None:
+    """Submit one request per gap, on schedule (open loop: arrivals do
+    not wait for completions)."""
+    t_next = time.monotonic()
+    for gap in gaps:
+        t_next += gap
+        lag = t_next - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        prompt = rng.integers(1, vocab, PROMPT_LEN).astype(np.int32)
+        out.append(client.submit(prompt, lane=lane))
+
+
+def run():
+    import jax
+    from repro.models import build_model
+    from repro.serving import (ServeEngine, TensorQueryClient,
+                               TensorQueryServer)
+
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_size=BATCH_SLOTS,
+                      capacity=CAPACITY, max_new_tokens=MAX_NEW,
+                      block_size=8, prefill_chunk=16)
+    server = TensorQueryServer(eng, max_wait_ms=4.0, pad_to=PROMPT_LEN,
+                               workers=4).start()
+    try:
+        warm = TensorQueryClient("127.0.0.1", server.port)
+        wq = warm.submit(np.arange(1, PROMPT_LEN + 1, dtype=np.int32))
+        warm.result(wq, timeout=120)   # compile prefill/decode paths
+        warm.close()
+
+        rng = np.random.default_rng(0)
+        n_batch = max(1, int(LOAD_S * BATCH_RATE))
+        batch_gaps = list(rng.exponential(1.0 / BATCH_RATE, n_batch))
+        probe_gaps = [PROBE_GAP_S] * int(LOAD_S / PROBE_GAP_S)
+        batch_cli = TensorQueryClient("127.0.0.1", server.port)
+        probe_cli = TensorQueryClient("127.0.0.1", server.port)
+        batch_qids: List[int] = []
+        probe_qids: List[int] = []
+        threads = [
+            threading.Thread(target=_submit_open_loop,
+                             args=(batch_cli, np.random.default_rng(1),
+                                   "batch", batch_gaps, cfg.vocab_size,
+                                   batch_qids)),
+            threading.Thread(target=_submit_open_loop,
+                             args=(probe_cli, np.random.default_rng(2),
+                                   "interactive", probe_gaps,
+                                   cfg.vocab_size, probe_qids)),
+        ]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        batch_res = [batch_cli.result(q, timeout=300) for q in batch_qids]
+        probe_res = [probe_cli.result(q, timeout=300) for q in probe_qids]
+        wall = time.perf_counter() - t0
+        batch_cli.close()
+        probe_cli.close()
+    finally:
+        server.stop()
+
+    assert all(r.status == "ok" for r in probe_res), \
+        [r.status for r in probe_res]
+    ok_batch = [r for r in batch_res if r.status == "ok"]
+    assert len(ok_batch) >= 0.9 * len(batch_res), \
+        f"only {len(ok_batch)}/{len(batch_res)} batch requests finished ok"
+
+    ttft_i = [r.ttft_s for r in probe_res]
+    ttft_b = [r.ttft_s for r in ok_batch]
+    tpot = [(r.latency_s - r.ttft_s) / (len(r.tokens) - 1)
+            for r in ok_batch + probe_res if len(r.tokens) > 1]
+    total_tokens = sum(len(r.tokens) for r in ok_batch + probe_res)
+
+    i_p50, i_p99 = _percentile_us(ttft_i, 50), _percentile_us(ttft_i, 99)
+    b_p50, b_p99 = _percentile_us(ttft_b, 50), _percentile_us(ttft_b, 99)
+    # the headline: priority lanes visible end-to-end over the socket
+    assert i_p99 < b_p99, \
+        f"interactive p99 TTFT {i_p99:.0f}us not under batch {b_p99:.0f}us"
+
+    yield (f"e7_interactive_ttft_p99,{i_p99:.1f},"
+           f"p50={i_p50 / 1e3:.1f}ms p99={i_p99 / 1e3:.1f}ms "
+           f"n={len(ttft_i)}")
+    yield (f"e7_batch_ttft_p99,{b_p99:.1f},"
+           f"p50={b_p50 / 1e3:.1f}ms p99={b_p99 / 1e3:.1f}ms "
+           f"n={len(ttft_b)} ok={len(ok_batch)}/{len(batch_res)}")
+    yield (f"e7_tpot,{_percentile_us(tpot, 50):.1f},"
+           f"median time/output-token; p99={_percentile_us(tpot, 99):.1f}us")
+    yield (f"e7_goodput,0.0,{total_tokens / wall:.1f} tok/s over "
+           f"{wall:.1f}s open-loop window")
+    yield (f"e7_sched,0.0,preemptions={eng.n_preemptions} "
+           f"restores={eng.n_restores} expired={eng.n_expired} "
+           f"prefix_hits={eng.n_prefix_hits} joins={eng.n_joins}")
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -9,6 +9,8 @@ from .aggregator import TensorAggregator, TensorRate
 from .batcher import TensorBatcher, TensorUnbatcher
 from .transform import TensorTransform
 from .flow import TensorIf, TensorRepoSink, TensorRepoSrc, TensorRepo
+from .query import (QueryConnection, TensorQueryServerSink,
+                    TensorQueryServerSrc)
 
 __all__ = [
     "Queue", "AppSrc", "VideoTestSrc", "SensorSrc", "TensorSrcIIO",
@@ -19,4 +21,5 @@ __all__ = [
     "TensorAggregator", "TensorRate", "TensorTransform",
     "TensorBatcher", "TensorUnbatcher",
     "TensorIf", "TensorRepoSink", "TensorRepoSrc", "TensorRepo",
+    "QueryConnection", "TensorQueryServerSrc", "TensorQueryServerSink",
 ]

@@ -46,8 +46,14 @@ class TensorFilter(Element):
     def __init__(self, name: str, fn: Optional[Callable] = None,
                  model: Optional[str] = None, framework: str = "python",
                  device=None, mesh=None, in_shardings=None, out_shardings=None,
-                 outputs_meta_key: Optional[str] = None, max_batch: int = 8):
+                 outputs_meta_key: Optional[str] = None, max_batch: int = 8,
+                 pass_meta: bool = False):
         super().__init__(name)
+        if pass_meta and framework != "python":
+            raise ValueError(
+                f"{name}: pass_meta requires the python backend — jitted "
+                f"backends cannot trace per-frame metadata dicts")
+        self.pass_meta = bool(pass_meta)
         self.add_sink_pad()
         self.add_src_pad()
         self.framework = framework
@@ -99,7 +105,8 @@ class TensorFilter(Element):
         return self._compiled
 
     # -- invocation -----------------------------------------------------------
-    def invoke(self, chunks: Sequence[Any]) -> Tuple[Any, ...]:
+    def invoke(self, chunks: Sequence[Any],
+               metas: Optional[List[Optional[dict]]] = None) -> Tuple[Any, ...]:
         fn = self._resolve()
         t0 = time.perf_counter()
         if self.framework.startswith("jax"):
@@ -108,6 +115,8 @@ class TensorFilter(Element):
             with ctx:
                 out = fn(*chunks)
             out = jax.block_until_ready(out)
+        elif metas is not None:
+            out = fn(*chunks, metas=metas)
         else:
             out = fn(*chunks)
         self.total_latency_s += time.perf_counter() - t0
@@ -116,12 +125,15 @@ class TensorFilter(Element):
             return tuple(out)
         return (out,)
 
-    def invoke_batched(self, chunks: Sequence[Any], n: int) -> Tuple[Any, ...]:
+    def invoke_batched(self, chunks: Sequence[Any], n: int,
+                       metas: Optional[List[Optional[dict]]] = None,
+                       ) -> Tuple[Any, ...]:
         """Invoke on a leading-batch-axis stack of ``n`` frames.
 
         Pads the batch axis up to the power-of-2 bucket so a jitted
         backend compiles at most once per bucket, then slices outputs
-        back to the true size.
+        back to the true size.  When ``pass_meta`` supplies per-frame
+        ``metas``, pad rows carry ``None``.
         """
         bucket = bucket_for(n, self.max_batch)
         if bucket > n:
@@ -129,8 +141,10 @@ class TensorFilter(Element):
                 [c, np.zeros((bucket - n,) + tuple(np.asarray(c).shape[1:]),
                              np.asarray(c).dtype)], axis=0)
                 for c in chunks]
+            if metas is not None:
+                metas = list(metas) + [None] * (bucket - n)
         t0 = time.perf_counter()
-        out = self.invoke(chunks)
+        out = self.invoke(chunks, metas=metas)
         stat = self.bucket_stats.setdefault(bucket, [0, 0, 0.0])
         stat[0] += 1
         stat[1] += n
@@ -148,9 +162,12 @@ class TensorFilter(Element):
     def transform(self, pad: Pad, buf: Buffer) -> Optional[Buffer]:
         info = buf.meta.get(BATCH_META_KEY)
         if info is not None:
-            out_chunks = self.invoke_batched(buf.chunks, int(info["size"]))
+            metas = info["meta"] if self.pass_meta else None
+            out_chunks = self.invoke_batched(buf.chunks, int(info["size"]),
+                                             metas=metas)
         else:
-            out_chunks = self.invoke(buf.chunks)
+            out_chunks = self.invoke(
+                buf.chunks, metas=[buf.meta] if self.pass_meta else None)
         new = buf.with_chunks(out_chunks)
         if self.outputs_meta_key:
             new.meta[self.outputs_meta_key] = out_chunks

@@ -1,0 +1,330 @@
+"""tensor_query — network-transparent pipeline edges (paper §III-C).
+
+NNStreamer's ``tensor_query_serversrc``/``tensor_query_serversink``
+let a pipeline serve requests from *other* processes/devices: tensors
+arrive over a socket, flow through the pipeline like any local stream,
+and results return to the requesting peer.  This module reproduces the
+pair for the LLM serving path: prompts come in as int32 token tensors,
+per-request token deltas stream back as they are generated, and a DONE
+frame carries the final sequence plus terminal status.
+
+Wire format (one TCP connection per client, frames in both directions)::
+
+    header  := !2sBBIBBdI   (network byte order, 22 bytes)
+               magic "TQ" | version | msg_type | qid | lane | status
+               | deadline (f64 relative seconds, 0 = none) | payload_len
+    payload := dtype_code u8 | ndim u8 | ndim * dim u32 | raw bytes (LE)
+               (MSG_ERROR carries a UTF-8 message instead of a tensor)
+
+Message types: ``REQUEST`` client->server (prompt tensor; lane +
+deadline honoured), ``TOKENS`` server->client (incremental new-token
+delta, best-effort), ``DONE`` server->client (full token tensor +
+terminal status), ``ERROR`` (malformed/oversized request).  ``qid`` is
+chosen by the client and is scoped to its connection, so the server
+routes responses by (connection, qid) while the engine schedules by its
+own request id.
+
+``TensorQueryServerSrc`` pushes one buffer per request: a ``(pad_to,)``
+int32 row, left-padded with zeros (the engine treats leading zeros as
+padding), with ``meta["query"]`` carrying the transport routing fields
+consumed by ``ServeEngine.as_pipeline_filter(use_meta=True)`` and
+``TensorQueryServerSink``.  The client side lives in
+``repro.serving.net``.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..element import Element, Pad
+from ..stream import Buffer
+from .sources import SourceElement
+
+MAGIC = b"TQ"
+VERSION = 1
+HDR = struct.Struct("!2sBBIBBdI")   # magic, ver, type, qid, lane, status,
+                                    # deadline, payload_len
+MSG_REQUEST, MSG_TOKENS, MSG_DONE, MSG_ERROR = 1, 2, 3, 4
+
+LANE_CODES = {"interactive": 0, "batch": 1}
+LANE_NAMES = {v: k for k, v in LANE_CODES.items()}
+STATUS_CODES = {"ok": 0, "timeout": 1, "expired": 2, "cancelled": 3,
+                "oom": 4, "error": 5}
+STATUS_NAMES = {v: k for k, v in STATUS_CODES.items()}
+_DTYPE_CODES = {"int32": 1, "float32": 2, "int64": 3, "uint8": 4}
+_DTYPE_NAMES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def pack_tensor(arr: np.ndarray) -> bytes:
+    """dtype code, ndim, dims (u32 each), then little-endian raw bytes."""
+    arr = np.asarray(arr)
+    name = str(arr.dtype)
+    if name not in _DTYPE_CODES:
+        raise ValueError(f"unsupported wire dtype {name!r}")
+    head = struct.pack("!BB", _DTYPE_CODES[name], arr.ndim)
+    dims = struct.pack(f"!{arr.ndim}I", *arr.shape)
+    return head + dims + arr.astype(arr.dtype.newbyteorder("<")).tobytes()
+
+
+def unpack_tensor(payload: bytes) -> np.ndarray:
+    code, ndim = struct.unpack_from("!BB", payload, 0)
+    if code not in _DTYPE_NAMES:
+        raise ValueError(f"unknown wire dtype code {code}")
+    shape = struct.unpack_from(f"!{ndim}I", payload, 2)
+    dtype = np.dtype(_DTYPE_NAMES[code]).newbyteorder("<")
+    raw = payload[2 + 4 * ndim:]
+    n = int(np.prod(shape)) if ndim else 1
+    if len(raw) != n * dtype.itemsize:
+        raise ValueError(f"tensor payload size mismatch: {len(raw)} bytes "
+                         f"for shape {shape} {dtype}")
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).astype(
+        _DTYPE_NAMES[code])
+
+
+def pack_frame(msg_type: int, qid: int, payload: bytes = b"", *,
+               lane: int = 0, status: int = 0, deadline: float = 0.0) -> bytes:
+    return HDR.pack(MAGIC, VERSION, msg_type, qid, lane, status,
+                    deadline, len(payload)) + payload
+
+
+def recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes; None on orderly EOF at a frame edge."""
+    chunks: List[bytes] = []
+    got = 0
+    while got < n:
+        part = sock.recv(n - got)
+        if not part:
+            if got == 0:
+                return None
+            raise ConnectionError("peer closed mid-frame")
+        chunks.append(part)
+        got += len(part)
+    return b"".join(chunks)
+
+
+def read_frame(sock: socket.socket
+               ) -> Optional[Tuple[int, int, int, int, float, bytes]]:
+    """-> (msg_type, qid, lane, status, deadline, payload) or None on EOF."""
+    hdr = recv_exact(sock, HDR.size)
+    if hdr is None:
+        return None
+    magic, ver, msg_type, qid, lane, status, deadline, plen = HDR.unpack(hdr)
+    if magic != MAGIC:
+        raise ValueError(f"bad frame magic {magic!r}")
+    if ver != VERSION:
+        raise ValueError(f"unsupported tensor_query version {ver}")
+    payload = recv_exact(sock, plen) if plen else b""
+    if plen and payload is None:
+        raise ConnectionError("peer closed mid-frame")
+    return msg_type, qid, lane, status, deadline, payload
+
+
+class QueryConnection:
+    """One accepted client connection; sends are serialized by a lock so
+    the sink thread and the engine's streaming callback never interleave
+    frames."""
+
+    def __init__(self, sock: socket.socket, addr):
+        self.sock = sock
+        self.addr = addr
+        self.alive = True
+        self._send_lock = threading.Lock()
+
+    def send_frame(self, msg_type: int, qid: int, payload: bytes = b"", *,
+                   status: int = 0) -> bool:
+        if not self.alive:
+            return False
+        frame = pack_frame(msg_type, qid, payload, status=status)
+        try:
+            with self._send_lock:
+                self.sock.sendall(frame)
+            return True
+        except OSError:
+            self.alive = False
+            return False
+
+    def close(self) -> None:
+        self.alive = False
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class TensorQueryServerSrc(SourceElement):
+    """Accept tensor-query clients and push one buffer per request.
+
+    Each REQUEST frame becomes a ``(pad_to,)`` int32 row (left-padded
+    with zeros so a downstream ``tensor_batcher`` can stack rows of
+    different prompt lengths) with routing metadata::
+
+        meta["query"] = {"conn": QueryConnection, "qid": int,
+                         "lane": "interactive"|"batch",
+                         "deadline": float|None,   # relative seconds
+                         "prompt_len": int, "t_arrival": float}
+
+    Oversized or malformed requests are answered with an ERROR frame and
+    never enter the pipeline.
+    """
+
+    def __init__(self, name: str, host: str = "127.0.0.1", port: int = 0,
+                 pad_to: int = 64, backlog: int = 16):
+        super().__init__(name)
+        self.host, self.port = host, int(port)
+        self.pad_to = int(pad_to)
+        self.backlog = int(backlog)
+        self._listener: Optional[socket.socket] = None
+        self._threads: List[threading.Thread] = []
+        self.connections: List[QueryConnection] = []
+        self.n_requests = 0
+        self.n_rejected = 0
+        self._eos_sent = False
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self.host, self.port
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        self._running = True
+        self._eos_sent = False
+        lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lst.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lst.bind((self.host, self.port))
+        lst.listen(self.backlog)
+        self.port = lst.getsockname()[1]
+        self._listener = lst
+        t = threading.Thread(target=self._accept_loop,
+                             name=f"qsrc:{self.name}:accept", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def stop(self) -> None:
+        self._running = False
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            self._listener = None
+        for conn in list(self.connections):
+            conn.close()
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads = []
+        # flush any partial batch downstream exactly once
+        if not self._eos_sent:
+            self._eos_sent = True
+            self.srcpad.push(Buffer.eos_buffer())
+
+    # -- network side -------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while self._running and self._listener is not None:
+            try:
+                sock, addr = self._listener.accept()
+            except OSError:
+                return                     # listener closed by stop()
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = QueryConnection(sock, addr)
+            self.connections.append(conn)
+            t = threading.Thread(target=self._reader, args=(conn,),
+                                 name=f"qsrc:{self.name}:{addr}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _reader(self, conn: QueryConnection) -> None:
+        while self._running and conn.alive:
+            try:
+                frame = read_frame(conn.sock)
+            except (OSError, ConnectionError, ValueError):
+                break
+            if frame is None:
+                break
+            msg_type, qid, lane, _status, deadline, payload = frame
+            if msg_type != MSG_REQUEST:
+                conn.send_frame(MSG_ERROR, qid,
+                                f"unexpected message type {msg_type}".encode(),
+                                status=STATUS_CODES["error"])
+                continue
+            try:
+                self._handle_request(conn, qid, lane, deadline, payload)
+            except BaseException as exc:   # noqa: BLE001 - bus-reported
+                self.post_error(exc)
+                break
+        conn.close()
+
+    def _handle_request(self, conn: QueryConnection, qid: int, lane: int,
+                        deadline: float, payload: bytes) -> None:
+        try:
+            prompt = np.asarray(unpack_tensor(payload), np.int32).reshape(-1)
+        except ValueError as exc:
+            self.n_rejected += 1
+            conn.send_frame(MSG_ERROR, qid, str(exc).encode(),
+                            status=STATUS_CODES["error"])
+            return
+        if prompt.size == 0 or prompt.size > self.pad_to:
+            self.n_rejected += 1
+            conn.send_frame(
+                MSG_ERROR, qid,
+                f"prompt length {prompt.size} outside (0, {self.pad_to}]"
+                .encode(), status=STATUS_CODES["error"])
+            return
+        row = np.zeros((self.pad_to,), np.int32)
+        row[self.pad_to - prompt.size:] = prompt
+        now = time.monotonic()
+        meta = {"query": {
+            "conn": conn, "qid": qid,
+            "lane": LANE_NAMES.get(lane, "interactive"),
+            "deadline": deadline if deadline > 0 else None,
+            "prompt_len": int(prompt.size), "t_arrival": now,
+        }}
+        self.n_requests += 1
+        self.srcpad.push(Buffer(row, pts=now, meta=meta))
+
+
+class TensorQueryServerSink(Element):
+    """Send each finished request back to its client as a DONE frame.
+
+    Expects per-request buffers (downstream of ``tensor_unbatcher``)
+    whose meta carries the ``query`` routing dict from
+    ``TensorQueryServerSrc`` plus the ``status`` / ``n_tokens`` fields
+    the engine filter wrote back.  Buffers without routing metadata are
+    counted and dropped (e.g. locally injected test traffic)."""
+
+    def __init__(self, name: str):
+        super().__init__(name)
+        self.add_sink_pad()
+        self.n_sent = 0
+        self.n_unroutable = 0
+        self.eos_seen = threading.Event()
+
+    def chain(self, pad: Pad, buf: Buffer) -> None:
+        if buf.eos:
+            self.eos_seen.set()
+            return
+        q = buf.meta.get("query") if isinstance(buf.meta, dict) else None
+        conn = q.get("conn") if isinstance(q, dict) else None
+        if conn is None:
+            self.n_unroutable += 1
+            return
+        tokens = np.asarray(buf.chunks[0], np.int32).reshape(-1)
+        n = buf.meta.get("n_tokens")
+        if n is not None:
+            tokens = tokens[:int(n)]
+        status = STATUS_CODES.get(buf.meta.get("status", "ok"),
+                                  STATUS_CODES["error"])
+        # count before the send: a client that acts on the DONE frame
+        # (and e.g. reads this counter) must never observe it lagging
+        self.n_sent += 1
+        if not conn.send_frame(MSG_DONE, int(q["qid"]), pack_tensor(tokens),
+                               status=status):
+            self.n_sent -= 1          # connection died under the send

@@ -26,7 +26,8 @@ def make_element(type_name: str, name: str, **props) -> Element:
 
 def _register_builtins() -> None:
     register_element("queue", lambda name, **p: E.Queue(
-        name, max_size=int(p.get("max_size", 16)), leaky=p.get("leaky", "no")))
+        name, max_size=int(p.get("max_size", 16)), leaky=p.get("leaky", "no"),
+        workers=int(p.get("workers", 1))))
     register_element("appsrc", lambda name, **p: E.AppSrc(name))
     register_element("videotestsrc", lambda name, **p: E.VideoTestSrc(
         name, width=int(p.get("width", 224)), height=int(p.get("height", 224)),
@@ -59,7 +60,8 @@ def _register_builtins() -> None:
         width=int(p.get("width", 0)), height=int(p.get("height", 0))))
     register_element("tensor_filter", lambda name, **p: E.TensorFilter(
         name, model=p.get("model"), framework=p.get("framework", "python"),
-        max_batch=int(p.get("max_batch", 8))))
+        max_batch=int(p.get("max_batch", 8)),
+        pass_meta=str(p.get("pass_meta", "false")).lower() == "true"))
     register_element("tensor_batcher", lambda name, **p: E.TensorBatcher(
         name, max_batch=int(p.get("max_batch", 8)),
         max_wait_ms=float(p["max_wait_ms"]) if "max_wait_ms" in p else None))
@@ -100,6 +102,13 @@ def _register_builtins() -> None:
         behavior=p.get("behavior", "route")))
     register_element("tensor_reposink", lambda name, **p: E.TensorRepoSink(
         name, slot=p["slot"]))
+    register_element("tensor_query_serversrc", lambda name, **p:
+        E.TensorQueryServerSrc(
+            name, host=p.get("host", "127.0.0.1"), port=int(p.get("port", 0)),
+            pad_to=int(p.get("pad_to", 64)),
+            backlog=int(p.get("backlog", 16))))
+    register_element("tensor_query_serversink", lambda name, **p:
+        E.TensorQueryServerSink(name))
     register_element("tensor_reposrc", lambda name, **p: E.TensorRepoSrc(
         name, slot=p["slot"],
         seed_shape=tuple(int(x) for x in str(p["seed_shape"]).split(":"))

@@ -93,6 +93,18 @@ def main():
                     help="recurrent families: state slabs in the pool "
                          "(default: one per batch slot; fewer gates "
                          "admission like a small block pool)")
+    ap.add_argument("--listen", type=int, default=None, metavar="PORT",
+                    help="serve over TCP via the tensor_query elements "
+                         "(0 = ephemeral port).  With --smoke, drives the "
+                         "synthetic requests through a loopback client and "
+                         "exits; otherwise serves until interrupted")
+    ap.add_argument("--lanes", default="interactive",
+                    help="comma list of priority lanes the smoke client "
+                         "cycles through (e.g. 'interactive,batch'; batch "
+                         "lane requests are preemptible)")
+    ap.add_argument("--max-wait-ms-net", type=float, default=5.0,
+                    help="--listen: micro-batch window of the server-side "
+                         "tensor_batcher")
     ap.add_argument("--burst", type=int, default=8,
                     help="decode burst length K: fused device steps per "
                          "host round-trip when no admissions/prefills are "
@@ -137,6 +149,42 @@ def main():
                     [shared, rng.integers(0, cfg.vocab_size,
                                           n - len(shared)).astype(np.int32)])
                 for n in lengths]
+
+    if args.listen is not None:
+        from ..serving import TensorQueryClient, TensorQueryServer
+        lanes = [l.strip() for l in args.lanes.split(",") if l.strip()]
+        server = TensorQueryServer(engine, port=args.listen,
+                                   max_wait_ms=args.max_wait_ms_net,
+                                   pad_to=args.prompt_len).start()
+        print(f"tensor_query server listening on 127.0.0.1:{server.port} "
+              f"(lanes: {', '.join(lanes)})")
+        try:
+            if not args.smoke:
+                while True:            # serve until interrupted
+                    time.sleep(1.0)
+                return
+            t0 = time.perf_counter()
+            client = TensorQueryClient("127.0.0.1", server.port)
+            qids = [client.submit(r, lane=lanes[i % len(lanes)])
+                    for i, r in enumerate(requests)]
+            rs = [client.result(q, timeout=300) for q in qids]
+            wall = time.perf_counter() - t0
+            total = sum(len(r.tokens) for r in rs if r.tokens is not None)
+            print(f"served {len(rs)} requests / {total} tokens over TCP "
+                  f"in {wall:.2f}s ({total / wall:.1f} tok/s)")
+            for r in rs[:3]:
+                print(f"  qid {r.qid}: status={r.status} "
+                      f"ttft={r.ttft_s:.3f}s tokens={list(r.tokens[:8])}...")
+            print(f"scheduler: prefills={engine.n_prefills} "
+                  f"joins={engine.n_joins} evictions={engine.n_evictions} "
+                  f"preemptions={engine.n_preemptions} "
+                  f"restores={engine.n_restores} expired={engine.n_expired}")
+            client.close()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.stop()
+        return
 
     t0 = time.perf_counter()
     if args.direct:

@@ -685,6 +685,55 @@ class TransformerLM:
         out["blocks"] = blocks
         return out
 
+    def gather_paged_pages(self, cache, blocks, slab):
+        """Spill read: pull physical blocks ``blocks`` ((n,) int32) out
+        of every attn layer's K/V store, and state slab ``slab`` (scalar
+        int32) out of every recurrent layer, into a standalone pytree
+        the engine can ``device_get`` and park in host memory while the
+        slot is preempted.  Layout mirrors ``copy_paged_block``: prefix
+        attn leaves index axis 0, periodic attn leaves index behind the
+        leading scan axis; recurrent slabs likewise.
+        """
+        def take(st, d, idx_attn, idx_state):
+            return jax.tree.map(idx_attn, st) if d[0] == "attn" \
+                else jax.tree.map(idx_state, st)
+
+        out: Dict[str, Any] = {}
+        if "prefix" in cache:
+            out["prefix"] = [
+                take(st, d, lambda a: a[blocks], lambda a: a[slab])
+                for d, st in zip(self.prefix_descs, cache["prefix"])]
+        out["blocks"] = {
+            f"s{j}": take(cache["blocks"][f"s{j}"], d,
+                          lambda a: a[:, blocks], lambda a: a[:, slab])
+            for j, d in enumerate(self.period_descs)}
+        return out
+
+    def scatter_paged_pages(self, cache, payload, blocks, slab):
+        """Spill write: the inverse of ``gather_paged_pages`` — place a
+        spilled payload at (possibly different) physical ``blocks`` and
+        ``slab``.  Attention reads go through the page table and
+        recurrent reads through the slot->slab map, so restoring to new
+        physical homes is invisible to the model: restored decode is
+        bit-identical to never having been preempted."""
+        def put(st, pst, d, set_attn, set_state):
+            return jax.tree.map(set_attn, st, pst) if d[0] == "attn" \
+                else jax.tree.map(set_state, st, pst)
+
+        out: Dict[str, Any] = {}
+        if "prefix" in cache:
+            out["prefix"] = [
+                put(st, pst, d, lambda a, p: a.at[blocks].set(p),
+                    lambda a, p: a.at[slab].set(p))
+                for d, st, pst in zip(self.prefix_descs, cache["prefix"],
+                                      payload["prefix"])]
+        out["blocks"] = {
+            f"s{j}": put(cache["blocks"][f"s{j}"], payload["blocks"][f"s{j}"],
+                         d, lambda a, p: a.at[:, blocks].set(p),
+                         lambda a, p: a.at[:, slab].set(p))
+            for j, d in enumerate(self.period_descs)}
+        return out
+
     def paged_step(self, params, cache, tokens, page_table, lengths, t_valid,
                    state_slots=None):
         """Advance each slot by up to T tokens through the paged cache.

@@ -2,6 +2,8 @@ from .engine import ServeEngine, GenerationResult
 from .kv_cache import (BlockAllocator, CacheFullError, DeviceSlotState,
                        ROOT_DIGEST, StateStore, chain_digest, paged_gather,
                        paged_scatter)
+from .net import TensorQueryClient, TensorQueryServer
+from .scheduler import LANES, SchedRequest, Scheduler
 from .steps import (make_prefill_step, make_decode_step, make_dense_burst,
                     make_paged_burst, make_paged_mixed_step,
                     make_sampler_core, make_slot_sampler, sample_logits)
@@ -9,6 +11,8 @@ from .steps import (make_prefill_step, make_decode_step, make_dense_burst,
 __all__ = ["ServeEngine", "GenerationResult", "BlockAllocator",
            "CacheFullError", "DeviceSlotState", "ROOT_DIGEST", "StateStore",
            "chain_digest", "paged_gather", "paged_scatter",
+           "LANES", "SchedRequest", "Scheduler",
+           "TensorQueryClient", "TensorQueryServer",
            "make_prefill_step", "make_decode_step", "make_dense_burst",
            "make_paged_burst", "make_paged_mixed_step", "make_sampler_core",
            "make_slot_sampler", "sample_logits"]

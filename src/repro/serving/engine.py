@@ -93,7 +93,6 @@ single-stepping by construction.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
 import time
@@ -105,6 +104,7 @@ import numpy as np
 
 from .kv_cache import (ROOT_DIGEST, BlockAllocator, CacheFullError,
                        DeviceSlotState, StateStore, chain_digest)
+from .scheduler import SchedRequest, Scheduler
 from .steps import (make_decode_step, make_dense_burst, make_paged_burst,
                     make_paged_mixed_step, make_prefill_step,
                     make_sampler_core)
@@ -116,40 +116,42 @@ class GenerationResult:
     prompt: np.ndarray
     tokens: np.ndarray
     latency_s: float
-
-
-@dataclasses.dataclass
-class _Request:
-    rid: int
-    prompt: np.ndarray
-    t_submit: float
-    # cached _match_prefix result for a queued request, valid while the
-    # pool epoch is unchanged (no release/register since it was taken)
-    match: Optional[Tuple[List[int], List[bytes], int]] = None
-    match_epoch: int = -1
+    # "ok" | "timeout" | "expired" | "cancelled" — non-ok results carry
+    # whatever tokens were generated before the request was failed
+    status: str = "ok"
+    ttft_s: Optional[float] = None    # submit -> first generated token
 
 
 class _Slot:
-    __slots__ = ("rid", "prompt", "tokens", "t_submit", "done")
+    __slots__ = ("rid", "prompt", "tokens", "t_submit", "done", "lane",
+                 "deadline", "tag", "status", "t_first", "adm_seq")
 
-    def __init__(self, req: _Request, first_token: int, eos_id: Optional[int],
-                 max_new: int):
+    def __init__(self, req: SchedRequest, first_token: int,
+                 eos_id: Optional[int], max_new: int):
         self.rid = req.rid
         self.prompt = req.prompt
         self.tokens: List[int] = [int(first_token)]
         self.t_submit = req.t_submit
         self.done = (eos_id is not None and int(first_token) == eos_id) \
             or max_new <= 1
+        self.lane = req.lane
+        self.deadline = req.deadline
+        self.tag = req.tag
+        self.status = "ok"
+        self.t_first: Optional[float] = None
+        self.adm_seq = 0
 
 
 class _PagedSlot:
     """Per-slot decode state in paged mode: true position counter lives
     in the engine's ``_lengths`` array; this tracks ownership."""
     __slots__ = ("rid", "prompt", "tokens", "t_submit", "done", "blocks",
-                 "reserve_left", "prefill_off", "digests")
+                 "reserve_left", "prefill_off", "digests", "lane",
+                 "deadline", "tag", "status", "t_first", "adm_seq")
 
-    def __init__(self, req: _Request, blocks: List[int], reserve_left: int,
-                 prefill_off: int = 0, digests: Optional[List[bytes]] = None):
+    def __init__(self, req: SchedRequest, blocks: List[int],
+                 reserve_left: int, prefill_off: int = 0,
+                 digests: Optional[List[bytes]] = None):
         self.rid = req.rid
         self.prompt = req.prompt
         self.tokens: List[int] = []
@@ -159,6 +161,12 @@ class _PagedSlot:
         self.reserve_left = reserve_left  # blocks still claimable lazily
         self.prefill_off = prefill_off    # prompt tokens already cached
         self.digests = digests if digests is not None else []  # per full page
+        self.lane = req.lane
+        self.deadline = req.deadline
+        self.tag = req.tag
+        self.status = "ok"
+        self.t_first: Optional[float] = None
+        self.adm_seq = 0
 
 
 class ServeEngine:
@@ -219,14 +227,27 @@ class ServeEngine:
             raise ValueError(f"burst must be >= 1, got {burst}")
         self.max_burst = int(burst)
         self.burst = int(burst)
-        # request queue + in-flight slot map
-        self._pending: collections.deque = collections.deque()
+        # request queue (two priority lanes) + in-flight slot map
+        self.scheduler = Scheduler()
         self._slots: List[Optional[_Slot]] = [None] * batch_size
         self._cache = None
         self._pos = 0                 # shared aligned decode position
         self._batch_axes = None       # cache pytree of batch-axis indices
         self._lock = threading.Lock()
         self._next_rid = 0
+        # completed results, keyed by rid until a wait() collects them;
+        # the condition variable wakes concurrent waiters, and the step
+        # lock elects exactly one thread at a time to drive step()
+        self._results: Dict[int, GenerationResult] = {}
+        self._results_cv = threading.Condition()
+        self._step_lock = threading.Lock()
+        self._adm_seq = 0             # admission order (preemption picks
+        #                               the youngest batch-lane slot)
+        # optional token-streaming hook: stream_cb(rid, new_tokens) fires
+        # whenever generated tokens for a request reach the host (once
+        # per slot per burst drain) — the network front door uses it to
+        # stream tokens back per-request before the batch completes
+        self.stream_cb = None
         # paged-mode state: block pool + per-slot page tables / lengths
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
@@ -265,12 +286,25 @@ class ServeEngine:
         self._lengths = np.zeros((batch_size,), np.int32)
         self._state_slots = np.zeros((batch_size,), np.int32)
         self._reserved = 0            # lazily-claimable blocks promised out
-        self._pool_epoch = 0          # bumped on release/register: a queued
-        #                               request's cached prefix match stays
-        #                               valid while this is unchanged
         copy_fn = getattr(model, "copy_paged_block", _generic_copy_paged_block)
         self._copy_block = jax.jit(copy_fn, donate_argnums=(0,)) \
             if self.paged else None
+        # preemption spill/restore: gather pages+slab to host / scatter
+        # them back at new physical homes.  Models without the protocol
+        # fall back to the generic block-axis convention (attn-only);
+        # recurrent stacks without it cannot be preempted.
+        self._gather_pages = None
+        self._scatter_pages = None
+        if self.paged:
+            gather = getattr(model, "gather_paged_pages", None)
+            scatter = getattr(model, "scatter_paged_pages", None)
+            if gather is not None and scatter is not None:
+                self._gather_pages = jax.jit(gather)
+                self._scatter_pages = jax.jit(scatter, donate_argnums=(0,))
+            elif not needs_state:
+                self._gather_pages = jax.jit(_generic_gather_pages)
+                self._scatter_pages = jax.jit(_generic_scatter_pages,
+                                              donate_argnums=(0,))
         self._paged_cache = None
         # optional per-request logit recording (conformance tests)
         self.trace_logits = trace_logits
@@ -312,6 +346,10 @@ class ServeEngine:
         self.n_prefix_hits = 0        # paged: admissions that mapped blocks
         self.n_shared_tokens = 0      # prompt tokens served from shared blocks
         self.n_cow_forks = 0          # shared blocks forked before a write
+        # scheduler counters
+        self.n_preemptions = 0        # batch-lane slots spilled to host
+        self.n_restores = 0           # preempted requests re-admitted
+        self.n_expired = 0            # queued requests past their deadline
         # decode-loop counters (see loop_stats())
         self.n_bursts = 0             # burst launches (>= 1 device step each)
         self.n_device_steps = 0       # fused megasteps executed on device
@@ -344,8 +382,16 @@ class ServeEngine:
         return np.concatenate(out, axis=1)
 
     # -- continuous batching ------------------------------------------------
-    def submit(self, prompt: np.ndarray) -> int:
-        """Enqueue a request; returns its request id (thread-safe)."""
+    def submit(self, prompt: np.ndarray, *, lane: str = "interactive",
+               deadline: Optional[float] = None, tag: Any = None) -> int:
+        """Enqueue a request; returns its request id (thread-safe).
+
+        ``lane`` picks the priority lane (``"interactive"`` admits ahead
+        of any queued ``"batch"`` work and may preempt running batch
+        slots); ``deadline`` is a relative TTFT budget in seconds — a
+        request still queued when it elapses fails with status
+        ``"expired"``; ``tag`` is an opaque caller handle carried into
+        nothing engine-side (the network layer uses it for routing)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.shape[0] == 0:
             raise ValueError(f"prompt must be non-empty 1-D, got {prompt.shape}")
@@ -353,10 +399,14 @@ class ServeEngine:
             raise ValueError(
                 f"prompt length {prompt.shape[0]} exceeds KV-cache capacity "
                 f"{self.capacity}; raise capacity= or truncate the prompt")
+        now = time.monotonic()
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
-            self._pending.append(_Request(rid, prompt, time.monotonic()))
+            self.scheduler.push(SchedRequest(
+                rid, prompt, lane=lane,
+                deadline=None if deadline is None else now + deadline,
+                tag=tag, t_submit=now))
             self.n_requests += 1
         return rid
 
@@ -367,7 +417,21 @@ class ServeEngine:
     @property
     def has_work(self) -> bool:
         with self._lock:
-            return bool(self._pending) or self.n_active > 0
+            return self.scheduler.pending or self.n_active > 0
+
+    def _finish(self, res: GenerationResult) -> None:
+        """Record a completed result and wake any wait()ers."""
+        with self._results_cv:
+            self._results[res.request_id] = res
+            self._results_cv.notify_all()
+
+    def _make_result(self, slot, now: float) -> GenerationResult:
+        return GenerationResult(
+            request_id=slot.rid, prompt=slot.prompt,
+            tokens=np.asarray(slot.tokens, np.int32),
+            latency_s=now - slot.t_submit, status=slot.status,
+            ttft_s=None if slot.t_first is None
+            else slot.t_first - slot.t_submit)
 
     def pool_stats(self) -> Optional[Dict[str, int]]:
         """Block-pool occupancy incl. shared vs private split (paged),
@@ -433,7 +497,7 @@ class ServeEngine:
                     slot.done = True
             return finished + self._evict()
         with self._lock:
-            pending = bool(self._pending)
+            pending = self.scheduler.pending
         # queue non-empty -> single-step so the next eviction admits at
         # once; otherwise burst, capped at the cache strip's remainder
         k = 1 if pending else min(self.burst, self.max_burst)
@@ -448,36 +512,125 @@ class ServeEngine:
                           k=k, paged=False)
         return finished + self._evict()
 
-    def serve(self, requests: List[np.ndarray],
-              timeout_s: float = 120.0) -> List[GenerationResult]:
-        """Serve via continuous batching; results in request order."""
-        rids = [self.submit(r) for r in requests]
-        deadline = time.monotonic() + timeout_s
-        done: Dict[int, GenerationResult] = {}
-        while self.has_work:
-            if time.monotonic() > deadline:
-                raise TimeoutError(
-                    f"serve: {len(done)}/{self.n_requests} finished before "
-                    f"timeout ({self.n_active} in flight)")
-            for res in self.step():
-                done[res.request_id] = res
-        return [done[rid] for rid in rids if rid in done]
+    def serve(self, requests: List[np.ndarray], timeout_s: float = 120.0,
+              lane: str = "interactive") -> List[GenerationResult]:
+        """Serve via continuous batching; results in request order.
 
-    def as_pipeline_filter(self):
+        On timeout the results completed before the deadline are
+        returned as-is and every unfinished request is failed with
+        status ``"timeout"`` (its tokens so far attached) — nothing is
+        dropped and the engine's pool is left clean."""
+        rids = [self.submit(r, lane=lane) for r in requests]
+        return self.wait(rids, timeout_s=timeout_s)
+
+    def wait(self, rids: List[int],
+             timeout_s: Optional[float] = None) -> List[GenerationResult]:
+        """Block until every request in ``rids`` has a result, driving
+        ``step()`` whenever no other thread is.  Safe to call from
+        multiple threads over one engine: all submissions share the
+        scheduler, exactly one waiter steps at a time, and each waiter
+        collects (and removes) only its own results."""
+        deadline = None if timeout_s is None \
+            else time.monotonic() + timeout_s
+        while True:
+            with self._results_cv:
+                if all(r in self._results for r in rids):
+                    break
+                missing = [r for r in rids if r not in self._results]
+            if deadline is not None and time.monotonic() >= deadline:
+                self._cancel(missing, "timeout")
+                break
+            if self._step_lock.acquire(blocking=False):
+                try:
+                    if self.has_work:
+                        self.step()
+                    else:
+                        time.sleep(0.001)
+                finally:
+                    self._step_lock.release()
+            else:
+                with self._results_cv:
+                    self._results_cv.wait(timeout=0.005)
+        with self._results_cv:
+            return [self._results.pop(rid) for rid in rids
+                    if rid in self._results]
+
+    def _cancel(self, rids: List[int], status: str) -> None:
+        """Fail every request in ``rids``: queued ones are popped with
+        their (possibly preempted) tokens attached, in-flight ones are
+        evicted with whatever they generated so far.  Runs under the
+        step lock so no megastep is mid-flight while slots are torn
+        down."""
+        rids = set(rids)
+        if not rids:
+            return
+        with self._step_lock:
+            now = time.monotonic()
+            with self._lock:
+                popped = [self.scheduler.pop_rid(rid) for rid in rids]
+            for req in popped:
+                if req is None:
+                    continue
+                self._finish(GenerationResult(
+                    request_id=req.rid, prompt=req.prompt,
+                    tokens=np.asarray(req.tokens, np.int32),
+                    latency_s=now - req.t_submit, status=status))
+            dirty = False
+            for slot in self._slots:
+                if slot is not None and slot.rid in rids:
+                    slot.status = status
+                    slot.done = True
+                    dirty = True
+            if dirty:
+                self._evict_paged() if self.paged else self._evict()
+
+    def as_pipeline_filter(self, *, use_meta: bool = False,
+                           on_submit=None, timeout_s: Optional[float] = None):
         """Adapter: (n, S) prompt batch -> (n, max_new_tokens) generations.
 
         Row order in == row order out, so TensorUnbatcher downstream can
         restore per-request pts/meta.  Rows shorter than max_new (early
         eos) are right-padded with eos_id (or 0).
-        """
+
+        With ``use_meta`` the returned callable accepts the per-row meta
+        dicts a ``pass_meta`` TensorFilter forwards: each row's
+        ``meta["query"]`` may carry ``prompt_len`` (strip transport
+        left-padding), ``lane``, ``deadline`` (relative seconds) and
+        ``tag``; after serving, ``status`` / ``ttft_s`` / ``n_tokens``
+        are written back into the meta for the downstream sink.
+        ``on_submit(rid, meta)`` fires immediately after each row is
+        submitted — before any token is generated — so a streaming
+        front door can route ``stream_cb`` tokens by request id."""
         pad = self.eos_id if self.eos_id is not None else 0
 
-        def fn(prompts):
+        def fn(prompts, metas=None):
             prompts = np.asarray(prompts, np.int32)
-            results = self.serve([row for row in prompts])
-            out = np.full((len(results), self.max_new_tokens), pad, np.int32)
-            for i, r in enumerate(results):
+            ms = list(metas) if (use_meta and metas is not None) \
+                else [None] * len(prompts)
+            rids = []
+            for row, m in zip(prompts, ms):
+                q = m.get("query", {}) if isinstance(m, dict) else {}
+                plen = int(q.get("prompt_len", 0)) or row.shape[0]
+                rid = self.submit(row[row.shape[0] - plen:],
+                                  lane=q.get("lane", "interactive"),
+                                  deadline=q.get("deadline"),
+                                  tag=q.get("tag"))
+                rids.append(rid)
+                if isinstance(m, dict):
+                    m["rid"] = rid
+                if on_submit is not None:
+                    on_submit(rid, m)
+            results = self.wait(rids, timeout_s=timeout_s)
+            by_id = {r.request_id: r for r in results}
+            out = np.full((len(rids), self.max_new_tokens), pad, np.int32)
+            for i, rid in enumerate(rids):
+                r = by_id.get(rid)
+                if r is None:
+                    continue
                 out[i, : len(r.tokens)] = r.tokens
+                if isinstance(ms[i], dict):
+                    ms[i].update(status=r.status, ttft_s=r.ttft_s,
+                                 n_tokens=int(len(r.tokens)))
             return out
         return fn
 
@@ -556,6 +709,7 @@ class ServeEngine:
         self.n_device_steps += n_steps
         if n_steps < k:
             self.n_burst_early_exits += 1
+        fresh: Dict[int, List[int]] = {}
         for kstep in range(n_steps):
             for i, slot in enumerate(self._slots):
                 if slot is None or not valid[kstep, i]:
@@ -564,6 +718,7 @@ class ServeEngine:
                     self.logit_trace.setdefault(slot.rid, []).append(
                         logits[kstep, i].copy())
                 slot.tokens.append(int(toks[kstep, i]))
+                fresh.setdefault(i, []).append(slot.tokens[-1])
                 if paged:
                     self._lengths[i] += 1
                 if ((self.eos_id is not None
@@ -574,20 +729,42 @@ class ServeEngine:
                     slot.done = True
         if not paged:
             self._pos += n_steps
+        now = time.monotonic()
+        for i, new_toks in fresh.items():
+            slot = self._slots[i]
+            if slot.t_first is None:
+                slot.t_first = now
+            if self.stream_cb is not None:
+                self.stream_cb(slot.rid, new_toks)
 
     # -- scheduler internals ------------------------------------------------
+    def _expire_queued(self) -> None:
+        """Fail queued requests whose TTFT deadline has passed."""
+        now = time.monotonic()
+        with self._lock:
+            dead = self.scheduler.expire(now)
+        for req in dead:
+            self.n_expired += 1
+            self._finish(GenerationResult(
+                request_id=req.rid, prompt=req.prompt,
+                tokens=np.asarray(req.tokens, np.int32),
+                latency_s=now - req.t_submit, status="expired"))
+
     def _admit(self) -> None:
+        self._expire_queued()
         free = [i for i, s in enumerate(self._slots) if s is None]
         if not free:
             return
         with self._lock:
-            if not self._pending:
+            if not self.scheduler.pending:
                 return
             if self.n_active == 0:
-                # batch drained: re-anchor with a fresh prefill wave
+                # batch drained: re-anchor with a fresh prefill wave,
+                # taking candidates in lane-priority order
                 self._cache = None
-                take = [self._pending.popleft()
-                        for _ in range(min(len(free), len(self._pending)))]
+                take = list(self.scheduler.candidates())[:len(free)]
+                for req in take:
+                    self.scheduler.remove(req)
                 joins = list(zip(free, take))
                 fresh = True
             elif self._pos >= self.capacity:
@@ -595,14 +772,15 @@ class ServeEngine:
                 # truncated; hold newcomers for the fresh re-anchor
                 return
             else:
-                # mid-decode join: only prompts that fit the current position
-                joins, keep = [], collections.deque()
-                for req in self._pending:
-                    if len(joins) < len(free) and req.prompt.shape[0] <= self._pos:
+                # mid-decode join: only prompts that fit the current
+                # position (scans the whole queue — a long prompt can
+                # never block a short one queued behind it)
+                joins = []
+                for req in self.scheduler.candidates():
+                    if len(joins) < len(free) \
+                            and req.prompt.shape[0] <= self._pos:
+                        self.scheduler.remove(req)
                         joins.append((free[len(joins)], req))
-                    else:
-                        keep.append(req)
-                self._pending = keep
                 fresh = False
         if not joins:
             return
@@ -631,12 +809,19 @@ class ServeEngine:
             self._cache = self._splice_cache(self._cache, cache, slot_ids)
             self.n_joins += len(joins)
         logits_np = np.asarray(logits) if self.trace_logits else None
+        now = time.monotonic()
         for slot_i, req in joins:
             if self.trace_logits:
                 self.logit_trace.setdefault(req.rid, []).append(
                     logits_np[slot_i].copy())
-            self._slots[slot_i] = _Slot(req, first_np[slot_i], self.eos_id,
-                                        self.max_new_tokens)
+            slot = _Slot(req, first_np[slot_i], self.eos_id,
+                         self.max_new_tokens)
+            slot.t_first = now
+            slot.adm_seq = self._adm_seq
+            self._adm_seq += 1
+            self._slots[slot_i] = slot
+            if self.stream_cb is not None:
+                self.stream_cb(slot.rid, [slot.tokens[-1]])
         self._dev.mark_dirty()
 
     def _evict(self) -> List[GenerationResult]:
@@ -645,10 +830,9 @@ class ServeEngine:
         for i, slot in enumerate(self._slots):
             if slot is None or not slot.done:
                 continue
-            out.append(GenerationResult(
-                request_id=slot.rid, prompt=slot.prompt,
-                tokens=np.asarray(slot.tokens, np.int32),
-                latency_s=now - slot.t_submit))
+            res = self._make_result(slot, now)
+            out.append(res)
+            self._finish(res)
             self._slots[i] = None
             self.n_evictions += 1
         return out
@@ -749,6 +933,10 @@ class ServeEngine:
                 self.logit_trace.setdefault(slot.rid, []).append(
                     logits_np[i].copy())
             slot.tokens.append(int(sampled_np[i]))
+            if slot.t_first is None:
+                slot.t_first = time.monotonic()
+            if self.stream_cb is not None:
+                self.stream_cb(slot.rid, [slot.tokens[-1]])
             # replay of the megastep's in-jit done rule
             if ((self.eos_id is not None and slot.tokens[-1] == self.eos_id)
                     or len(slot.tokens) >= self.max_new_tokens
@@ -764,7 +952,7 @@ class ServeEngine:
         shared block in that range is COW-forked — the loop then never
         needs the host until its ring buffer is drained."""
         with self._lock:
-            pending = bool(self._pending)
+            pending = self.scheduler.pending
         k = 1 if pending else min(self.burst, self.max_burst)
         k = max(1, k)
         any_active = False
@@ -836,79 +1024,267 @@ class ServeEngine:
         matched = min(off, L - 1)
         return mapped, digests[:matched // bs], matched
 
-    def _match_prefix_cached(self, req: _Request):
-        """Memoized match for a queued request.  Blocks only leave the
-        pool (or the content table) through release/register, each of
-        which bumps ``_pool_epoch`` — so while the epoch is unchanged a
-        cached match is still valid and a blocked queue head costs O(1)
-        per tick instead of re-hashing its whole prompt."""
-        if req.match is None or req.match_epoch != self._pool_epoch:
+    def _match_prefix_cached(self, req: SchedRequest):
+        """Memoized match for a queued request.  Blocks only enter or
+        leave the content table through register/unregister, each of
+        which bumps the allocator's ``epoch`` — so while the epoch is
+        unchanged a cached match is still valid and a blocked request
+        costs O(1) per admission scan instead of re-hashing its whole
+        prompt."""
+        if req.match is None or req.match_epoch != self.allocator.epoch:
             req.match = self._match_prefix(req.prompt)
-            req.match_epoch = self._pool_epoch
+            req.match_epoch = self.allocator.epoch
         return req.match
 
     def _admit_paged(self) -> None:
-        """Admit queued requests into free slots, FIFO.  A request needs
-        a slot plus a worst-case *private*-block reservation: the pages
-        its matched prefix shares forever are discounted, everything
-        else (fresh prompt pages, decode extensions, one possible COW
-        fork of the tail page) is budgeted up front, so mid-decode
-        allocation never fails.  Recurrent families additionally need
-        one free state slab — checked before anything is taken, so
-        admission stays all-or-nothing across both pools.  The queue
-        head blocks until it fits — the request stays queued, decode
-        continues, nothing crashes."""
+        """Admit queued requests into free slots, in lane-priority order
+        (interactive first, FIFO within a lane).
+
+        A request needs a slot plus a worst-case *private*-block
+        reservation: the pages its matched prefix shares forever are
+        discounted, everything else (fresh prompt pages, decode
+        extensions, possible COW forks in the write range) is budgeted
+        up front, so mid-decode allocation never fails.  Recurrent
+        families additionally need one free state slab — checked before
+        anything is taken, so admission stays all-or-nothing across
+        both pools.  The scan is *size-aware*: a candidate that does
+        not fit stays queued and the scan moves on, so a too-large
+        request can never head-of-line-block a smaller one behind it.
+        If an interactive candidate is blocked on resources while
+        batch-lane slots are running, the youngest batch slot is
+        preempted (spilled to host memory, re-queued at its lane's
+        front) and the scan retries."""
+        self._expire_queued()
+        while True:
+            blocked_interactive = self._admit_paged_scan()
+            if blocked_interactive and self._preempt_for_interactive():
+                continue
+            return
+
+    def _admit_paged_scan(self) -> bool:
+        """One admission pass; returns True if an interactive candidate
+        was left queued for lack of resources."""
         free = [i for i, s in enumerate(self._slots) if s is None]
         mid_decode = self.n_active > 0
         joins = []
+        blocked_interactive = False
         with self._lock:
-            while free and self._pending:
-                req = self._pending[0]
-                plen = req.prompt.shape[0]
-                mapped, digests, matched = self._match_prefix_cached(req)
-                total = self.allocator.blocks_for(
-                    min(plen + self.max_new_tokens, self.capacity))
-                # pages below matched // block_size are never written by
-                # this slot, so they stay shared for its whole lifetime
-                needed = total - matched // self.block_size
-                if needed > self.allocator.n_free - self._reserved:
+            for req in self.scheduler.candidates():
+                if blocked_interactive and req.lane == "batch":
+                    # strict priority: batch work must not slip past a
+                    # resource-blocked interactive candidate (it would
+                    # be preempted right back — livelock)
+                    continue
+                if not free:
+                    if req.lane == "interactive":
+                        blocked_interactive = True
                     break
-                if self.state_store is not None \
-                        and self.state_store.n_free == 0:
-                    break              # state slabs exhausted: stay queued
-                self._pending.popleft()
-                n_fresh = self.allocator.blocks_for(plen) - len(mapped)
-                try:
-                    fresh = self.allocator.acquire(n_fresh)
-                except CacheFullError:   # unreachable given the check above
-                    self._pending.appendleft(req)
-                    break
-                self.allocator.share(mapped)
-                blocks = mapped + fresh
-                self._reserved += needed - n_fresh
-                slab = 0
-                if self.state_store is not None:
-                    slab = self.state_store.admit(req.rid)
-                    # the slab's previous state is zeroed by the model's
-                    # first step for this slot (lengths == 0 blanking)
-                    self.state_store.mark_reset(slab)
-                joins.append((free.pop(0), req, blocks, needed - n_fresh,
-                              matched, digests, slab))
-        for slot_i, req, blocks, reserve, matched, digests, slab in joins:
-            if mid_decode:
-                self.n_joins += 1
-            if matched:
-                self.n_prefix_hits += 1
-                self.n_shared_tokens += matched
-            self._slots[slot_i] = _PagedSlot(req, blocks, reserve,
-                                             prefill_off=matched,
-                                             digests=list(digests))
-            self._page_table[slot_i, :] = 0
-            self._page_table[slot_i, :len(blocks)] = blocks
-            self._lengths[slot_i] = matched
-            self._state_slots[slot_i] = slab
+                fit = self._restore_fit(req, free) if req.preempted \
+                    else self._fresh_fit(req, free)
+                if fit is None:
+                    if self.allocator.n_live == 0 and self._reserved == 0 \
+                            and (self.state_store is None
+                                 or self.state_store.n_live == 0):
+                        # does not fit an *empty* pool: it never will —
+                        # fail it instead of wedging the queue forever
+                        self.scheduler.remove(req)
+                        self._finish(GenerationResult(
+                            request_id=req.rid, prompt=req.prompt,
+                            tokens=np.asarray(req.tokens, np.int32),
+                            latency_s=time.monotonic() - req.t_submit,
+                            status="oom"))
+                        continue
+                    if req.lane == "interactive":
+                        blocked_interactive = True
+                    continue           # size-aware: scan past this one
+                self.scheduler.remove(req)
+                joins.append(fit)
+        for join in joins:
+            kind, slot_i, req = join[0], join[1], join[2]
+            slot = self._build_restore_slot(join) if kind == "restore" \
+                else self._build_fresh_slot(join, mid_decode)
+            slot.adm_seq = self._adm_seq
+            self._adm_seq += 1
+            self._slots[slot_i] = slot
         if joins:
             self._dev.mark_dirty()
+        return blocked_interactive
+
+    def _fresh_fit(self, req: SchedRequest, free: List[int]):
+        """Try to take resources for a fresh admission (all-or-nothing);
+        None if the request does not fit right now."""
+        plen = req.prompt.shape[0]
+        mapped, digests, matched = self._match_prefix_cached(req)
+        total = self.allocator.blocks_for(
+            min(plen + self.max_new_tokens, self.capacity))
+        # pages below matched // block_size are never written by this
+        # slot, so they stay shared for its whole lifetime
+        needed = total - matched // self.block_size
+        # retained mapped blocks are resurrected off the free list by
+        # share() below — they consume free-list entries on top of the
+        # private budget, so the fit check must count them
+        n_resurrect = sum(1 for b in mapped if self.allocator.ref(b) == 0)
+        if needed + n_resurrect > self.allocator.n_free - self._reserved:
+            return None
+        if self.state_store is not None and self.state_store.n_free == 0:
+            return None                # state slabs exhausted: stay queued
+        # share (and resurrect) the mapped prefix *before* acquiring
+        # fresh blocks — acquire recycles retained blocks and must never
+        # recycle one this very admission is about to map
+        self.allocator.share(mapped)
+        n_fresh = self.allocator.blocks_for(plen) - len(mapped)
+        try:
+            fresh = self.allocator.acquire(n_fresh)
+        except CacheFullError:           # unreachable given the check above
+            self.allocator.release(mapped)
+            return None
+        blocks = mapped + fresh
+        self._reserved += needed - n_fresh
+        slab = 0
+        if self.state_store is not None:
+            slab = self.state_store.admit(req.rid)
+            # the slab's previous state is zeroed by the model's first
+            # step for this slot (lengths == 0 blanking)
+            self.state_store.mark_reset(slab)
+        return ("fresh", free.pop(0), req, blocks, needed - n_fresh,
+                matched, digests, slab)
+
+    def _build_fresh_slot(self, join, mid_decode: bool) -> "_PagedSlot":
+        _, slot_i, req, blocks, reserve, matched, digests, slab = join
+        if mid_decode:
+            self.n_joins += 1
+        if matched:
+            self.n_prefix_hits += 1
+            self.n_shared_tokens += matched
+        slot = _PagedSlot(req, blocks, reserve, prefill_off=matched,
+                          digests=list(digests))
+        self._page_table[slot_i, :] = 0
+        self._page_table[slot_i, :len(blocks)] = blocks
+        self._lengths[slot_i] = matched
+        self._state_slots[slot_i] = slab
+        return slot
+
+    def _restore_fit(self, req: SchedRequest, free: List[int]):
+        """Try to take resources to re-admit a preempted request.  No
+        prefix-share discount: every page is acquired private and the
+        spilled KV/state is scattered back, so the restored slot is
+        bit-identical to never having been preempted."""
+        plen = req.prompt.shape[0]
+        total = self.allocator.blocks_for(
+            min(plen + self.max_new_tokens, self.capacity))
+        if total > self.allocator.n_free - self._reserved:
+            return None
+        if self.state_store is not None and self.state_store.n_free == 0:
+            return None
+        n_now = self.allocator.blocks_for(max(req.length, 1))
+        blocks = self.allocator.acquire(n_now)
+        self._reserved += total - n_now
+        slab = 0
+        if self.state_store is not None:
+            slab = self.state_store.admit(req.rid)
+            self.state_store.mark_reset(slab)   # scatter overwrites it
+        return ("restore", free.pop(0), req, blocks, total - n_now, slab)
+
+    def _build_restore_slot(self, join) -> "_PagedSlot":
+        """Scatter a preempted request's spilled pages/slab into its new
+        physical homes and rebuild the slot mid-sequence.  Attention
+        reads go through the page table and sampling keys are a pure
+        function of (request, step), so decode resumes bit-identically
+        regardless of where the pages landed."""
+        _, slot_i, req, blocks, reserve, slab = join
+        self._ensure_paged_cache()
+        if req.spill is not None:
+            self._paged_cache = self._scatter_pages(
+                self._paged_cache, req.spill,
+                jnp.asarray(blocks, jnp.int32), jnp.int32(slab))
+        slot = _PagedSlot(req, blocks, reserve,
+                          prefill_off=len(req.prompt),
+                          digests=list(req.digests))
+        slot.tokens = list(req.tokens)
+        self._page_table[slot_i, :] = 0
+        self._page_table[slot_i, :len(blocks)] = blocks
+        self._lengths[slot_i] = req.length
+        self._state_slots[slot_i] = slab
+        self.n_restores += 1
+        if self.n_active > 0:
+            self.n_joins += 1
+        return slot
+
+    def _ensure_paged_cache(self) -> None:
+        if self._paged_cache is None:
+            kw = {"num_state_slots": self.num_state_slots} \
+                if self.state_store is not None else {}
+            self._paged_cache = self.model.init_paged_cache(
+                self.allocator.num_blocks, self.block_size,
+                dtype=self.cache_dtype, **kw)
+
+    # -- preemption ---------------------------------------------------------
+    def preempt(self, rid: int) -> bool:
+        """Spill the slot serving ``rid`` to host memory and re-queue it
+        at the front of its lane (operator / test hook; the scheduler
+        calls the same path automatically for blocked interactive
+        work).  Returns False if ``rid`` is not in a slot."""
+        if not self.paged:
+            raise ValueError("preemption requires paged mode")
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.rid == rid and not slot.done:
+                self._preempt_slot(i)
+                return True
+        return False
+
+    def _preempt_for_interactive(self) -> bool:
+        """Spill the youngest running batch-lane slot (least cached work
+        lost) to make room for a blocked interactive candidate."""
+        victims = [(slot.adm_seq, i)
+                   for i, slot in enumerate(self._slots)
+                   if slot is not None and slot.lane == "batch"
+                   and not slot.done
+                   and (self._gather_pages is not None
+                        or slot.prefill_off < len(slot.prompt)
+                        or not slot.tokens)]
+        if not victims:
+            return False
+        self._preempt_slot(max(victims)[1])
+        return True
+
+    def _preempt_slot(self, slot_i: int) -> None:
+        """Evict slot ``slot_i`` mid-flight, keeping its work: decode
+        slots get their used KV pages (and recurrent state slab)
+        gathered to host memory for a bit-identical restore; a slot
+        still mid-prefill (no token emitted yet) is simply restarted —
+        re-prefilling is deterministic, so nothing observable is lost.
+        The request re-enters the *front* of its lane."""
+        slot = self._slots[slot_i]
+        req = SchedRequest(rid=slot.rid, prompt=slot.prompt, lane=slot.lane,
+                           deadline=slot.deadline, tag=slot.tag,
+                           t_submit=slot.t_submit)
+        if slot.tokens and slot.prefill_off >= len(slot.prompt):
+            if self._gather_pages is None:
+                raise RuntimeError(
+                    f"{type(self.model).__name__} has recurrent state but "
+                    "no gather_paged_pages/scatter_paged_pages: cannot "
+                    "preempt a decoding slot")
+            L = int(self._lengths[slot_i])
+            n_pages = self.allocator.blocks_for(L)
+            payload = self._gather_pages(
+                self._paged_cache,
+                jnp.asarray(slot.blocks[:n_pages], jnp.int32),
+                jnp.int32(self._state_slots[slot_i]))
+            req.spill = jax.device_get(payload)
+            req.length = L
+            req.tokens = list(slot.tokens)
+            req.digests = list(slot.digests)
+        self.allocator.release(slot.blocks)
+        if self.state_store is not None:
+            self.state_store.evict(slot.rid)
+        self._reserved -= slot.reserve_left
+        self._page_table[slot_i, :] = 0
+        self._lengths[slot_i] = 0
+        self._slots[slot_i] = None
+        self._dev.mark_dirty()
+        self.n_preemptions += 1
+        with self._lock:
+            self.scheduler.push(req, front=True)
 
     def _extend_blocks(self, slot_i: int, slot: _PagedSlot,
                        n_tokens: int) -> None:
@@ -933,7 +1309,12 @@ class ServeEngine:
         first = start // bs
         last = (start + n_new - 1) // bs
         for p in range(first, min(last + 1, len(slot.blocks))):
-            if self.allocator.ref(slot.blocks[p]) > 1:
+            # fork if shared — or still registered: a resurrected block
+            # can be held at refcount 1, but the content table still
+            # advertises its KV, so writing in place would corrupt what
+            # future joiners map
+            if self.allocator.ref(slot.blocks[p]) > 1 \
+                    or self.allocator.is_registered(slot.blocks[p]):
                 self._fork_block(slot_i, slot, p)
 
     def _fork_block(self, slot_i: int, slot: _PagedSlot, p: int) -> None:
@@ -948,7 +1329,6 @@ class ServeEngine:
         self._reserved -= 1
         self._paged_cache = self._copy_block(self._paged_cache, old, new)
         self.allocator.release([old])
-        self._pool_epoch += 1
         slot.blocks[p] = new
         self._page_table[slot_i, p] = new
         self._dev.mark_dirty()
@@ -974,7 +1354,6 @@ class ServeEngine:
             parent = slot.digests[-1] if slot.digests else ROOT_DIGEST
             self.allocator.register(slot.blocks[p], parent, toks)
             slot.digests.append(chain_digest(parent, toks))
-            self._pool_epoch += 1
 
     def _evict_paged(self) -> List[GenerationResult]:
         out: List[GenerationResult] = []
@@ -982,16 +1361,16 @@ class ServeEngine:
         for i, slot in enumerate(self._slots):
             if slot is None or not slot.done:
                 continue
-            out.append(GenerationResult(
-                request_id=slot.rid, prompt=slot.prompt,
-                tokens=np.asarray(slot.tokens, np.int32),
-                latency_s=now - slot.t_submit))
+            res = self._make_result(slot, now)
+            out.append(res)
+            self._finish(res)
             # refcounted release: shared blocks stay resident (and
-            # content-addressable) as long as any other slot maps them
+            # content-addressable) as long as any other slot maps them;
+            # registered blocks at refcount 0 are *retained* — the next
+            # identical prompt maps them instead of re-prefilling
             self.allocator.release(slot.blocks)
             if self.state_store is not None:
                 self.state_store.evict(slot.rid)
-            self._pool_epoch += 1
             self._reserved -= slot.reserve_left
             self._page_table[i, :] = 0
             self._lengths[i] = 0
@@ -1039,3 +1418,27 @@ def _generic_copy_paged_block(cache, src: int, dst: int):
         idx = [slice(None)] * (leaf.ndim - 4)
         return leaf.at[tuple(idx + [dst])].set(leaf[tuple(idx + [src])])
     return jax.tree.map(cp, cache)
+
+
+def _generic_gather_pages(cache, blocks, slab):
+    """Fallback spill gather for attn-only models without
+    ``gather_paged_pages`` (same block-axis convention as the COW
+    fallback; ``slab`` is unused — recurrent stacks must implement the
+    model-level protocol)."""
+    del slab
+
+    def take(leaf):
+        idx = [slice(None)] * (leaf.ndim - 4)
+        return leaf[tuple(idx + [blocks])]
+    return jax.tree.map(take, cache)
+
+
+def _generic_scatter_pages(cache, payload, blocks, slab):
+    """Fallback spill scatter for attn-only models (inverse of
+    ``_generic_gather_pages``)."""
+    del slab
+
+    def put(leaf, p):
+        idx = [slice(None)] * (leaf.ndim - 4)
+        return leaf.at[tuple(idx + [blocks])].set(p)
+    return jax.tree.map(put, cache, payload)

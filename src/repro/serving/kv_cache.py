@@ -14,9 +14,16 @@ instead carves one shared pool of ``num_blocks`` fixed-size blocks:
     content table maps ``(parent chain digest, block tokens)`` to the
     physical block holding that prefix's KV, which is what lets
     ``ServeEngine`` map a joiner's common prompt prefix straight into
-    its page table instead of re-prefilling it.  Entries are removed
-    the moment their block is freed — a table hit always points at
-    live, valid KV.
+    its page table instead of re-prefilling it.  A *registered* block
+    whose refcount drops to zero is **retained**: it stays in the
+    content table on an LRU free list (its KV is still resident and
+    valid — nothing has written over it), so an identical prompt
+    arriving right after its twin finished maps the whole prefix
+    instead of re-prefilling from scratch.  ``share`` resurrects such a
+    block off the free list; ``acquire`` recycles retained blocks
+    (oldest first, unregistering at that moment) only after the plain
+    free list is exhausted — a table hit therefore always points at
+    valid KV.
   * ``paged_scatter`` / ``paged_gather`` — jit-friendly primitives
     mapping logical token positions to physical block rows through a
     per-slot page table.  They live with the attention math in
@@ -229,16 +236,27 @@ class BlockAllocator:
         self.block_size = int(block_size)
         # FIFO reuse keeps physical placement deterministic for tests
         self._free: collections.deque = collections.deque(range(num_blocks))
+        # retained: registered blocks at refcount 0, LRU order (dicts
+        # preserve insertion order; oldest entry is recycled first)
+        self._retained: Dict[int, None] = {}
         self._ref: Dict[int, int] = {}
         # content table: parent digest -> {page tokens -> block id}, plus
-        # the reverse index used to unregister a block the moment it dies
+        # the reverse index used to unregister a block when it is recycled
         self._table: Dict[bytes, Dict[Tuple[int, ...], int]] = {}
         self._key_of: Dict[int, Tuple[bytes, Tuple[int, ...]]] = {}
+        # bumped whenever the content table changes (register/unregister):
+        # prefix matches memoized against an unchanged epoch stay valid
+        self.epoch = 0
 
     # -- occupancy ----------------------------------------------------------
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return len(self._free) + len(self._retained)
+
+    @property
+    def n_retained(self) -> int:
+        """Free blocks still addressable through the content table."""
+        return len(self._retained)
 
     @property
     def n_live(self) -> int:
@@ -262,11 +280,23 @@ class BlockAllocator:
         """Blocks currently addressable through the content table."""
         return set(self._key_of)
 
+    def retained_blocks(self) -> Set[int]:
+        """Registered blocks at refcount 0 (on the LRU retained list)."""
+        return set(self._retained)
+
+    def is_registered(self, block: int) -> bool:
+        """True while ``block`` is addressable through the content
+        table.  A writer must COW-fork such a block even at refcount 1
+        (post-resurrection): overwriting it would silently corrupt the
+        KV the table still advertises."""
+        return block in self._key_of
+
     def stats(self) -> Dict[str, int]:
         shared = self.n_shared
         return {"num_blocks": self.num_blocks, "n_free": self.n_free,
                 "n_live": self.n_live, "n_shared": shared,
-                "n_private": self.n_live - shared, "n_table": self.n_table}
+                "n_private": self.n_live - shared, "n_table": self.n_table,
+                "n_retained": self.n_retained}
 
     def blocks_for(self, n_tokens: int) -> int:
         """Blocks needed to hold ``n_tokens`` (at least one)."""
@@ -275,39 +305,58 @@ class BlockAllocator:
     # -- lifecycle ----------------------------------------------------------
     def acquire(self, n: int = 1) -> List[int]:
         """Take ``n`` private blocks (refcount 1) off the free list,
-        all-or-nothing."""
+        all-or-nothing.  Plain (unregistered) free blocks are handed out
+        first; retained blocks are recycled oldest-first and leave the
+        content table only at that moment."""
         if n < 0:
             raise ValueError(f"cannot acquire {n} blocks")
-        if n > len(self._free):
+        if n > self.n_free:
             raise CacheFullError(
-                f"need {n} blocks, only {len(self._free)}/{self.num_blocks} free")
-        out = [self._free.popleft() for _ in range(n)]
+                f"need {n} blocks, only {self.n_free}/{self.num_blocks} free")
+        out: List[int] = []
+        while len(out) < n and self._free:
+            out.append(self._free.popleft())
+        while len(out) < n:
+            b = next(iter(self._retained))     # LRU: oldest insertion
+            del self._retained[b]
+            self._unregister(b)
+            out.append(b)
         for b in out:
             self._ref[b] = 1
         return out
 
     def share(self, blocks: Iterable[int]) -> None:
-        """Add a reference to already-live blocks (prefix sharing)."""
+        """Add a reference to already-live blocks (prefix sharing).  A
+        *retained* block (registered, refcount 0) is resurrected off the
+        free list with refcount 1 — this is the post-eviction prefix-hit
+        path.  Sharing an unregistered free block raises."""
         blocks = list(blocks)
         for b in blocks:
-            if b not in self._ref:
+            if b not in self._ref and b not in self._retained:
                 raise ValueError(f"cannot share free block {b}")
         for b in blocks:
-            self._ref[b] += 1
-        return None
+            if b in self._ref:
+                self._ref[b] += 1
+            else:
+                del self._retained[b]
+                self._ref[b] = 1
 
     def release(self, blocks: Iterable[int]) -> None:
-        """Drop one reference per block; a block returns to the free
-        list (and leaves the content table) only at refcount zero.
-        Releasing a free/foreign block raises."""
+        """Drop one reference per block; a block returns to a free list
+        only at refcount zero — the LRU retained list if it is in the
+        content table (its KV stays addressable for future prefix hits),
+        the plain free list otherwise.  Releasing a free/foreign block
+        raises."""
         for b in blocks:
             r = self._ref.get(b, 0)
             if r <= 0:
                 raise ValueError(f"block {b} is not allocated (double free?)")
             if r == 1:
                 del self._ref[b]
-                self._unregister(b)
-                self._free.append(b)
+                if b in self._key_of:
+                    self._retained[b] = None
+                else:
+                    self._free.append(b)
             else:
                 self._ref[b] = r - 1
 
@@ -332,6 +381,7 @@ class BlockAllocator:
             return                      # identical content already resident
         kids[key] = block
         self._key_of[block] = (parent, key)
+        self.epoch += 1
 
     def lookup(self, parent: bytes,
                tokens: Sequence[int]) -> Optional[int]:
@@ -363,3 +413,4 @@ class BlockAllocator:
             del kids[tokens]
             if not kids:
                 del self._table[parent]
+        self.epoch += 1

@@ -1,0 +1,233 @@
+"""Tensor-query networking: the serving stack's front door.
+
+``TensorQueryServer`` mounts a :class:`~repro.serving.engine.ServeEngine`
+behind the ``tensor_query_serversrc`` / ``tensor_query_serversink``
+pipeline elements (wire format in :mod:`repro.core.elements.query`,
+re-exported here):
+
+    serversrc ! tensor_batcher ! queue(workers=N) !
+        tensor_filter(pass_meta, engine.as_pipeline_filter) !
+        tensor_unbatcher ! serversink
+
+The batcher closes a micro-batch on size or ``max_wait_ms``; the
+multi-worker queue lets several batches block inside the engine filter
+*concurrently* (the engine's ``wait`` protocol elects one stepping
+thread among them), which is what allows an interactive request to be
+submitted — and to preempt batch-lane slots — while earlier batches are
+still generating.  Tokens stream back per-request through the engine's
+``stream_cb`` as they are drained from the decode burst ring buffer;
+the DONE frame from the serversink carries the authoritative full
+sequence plus terminal status, so a TOKENS delta lost to the
+registration race (a token emitted between ``submit`` and the
+``on_submit`` route registration) costs an increment, never data.
+
+``TensorQueryClient`` is the matching client: ``submit`` returns a
+connection-scoped query id immediately; a reader thread folds TOKENS
+deltas into per-request state (recording time-to-first-token on
+arrival) and ``result(qid)`` blocks for the DONE frame.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.elements.query import (HDR, LANE_CODES, LANE_NAMES, MAGIC,
+                                   MSG_DONE, MSG_ERROR, MSG_REQUEST,
+                                   MSG_TOKENS, STATUS_CODES, STATUS_NAMES,
+                                   VERSION, pack_frame, pack_tensor,
+                                   read_frame, unpack_tensor)
+
+__all__ = ["TensorQueryClient", "TensorQueryServer",
+           "HDR", "MAGIC", "VERSION", "MSG_REQUEST", "MSG_TOKENS",
+           "MSG_DONE", "MSG_ERROR", "LANE_CODES", "LANE_NAMES",
+           "STATUS_CODES", "STATUS_NAMES",
+           "pack_frame", "pack_tensor", "read_frame", "unpack_tensor"]
+
+
+class QueryResult:
+    """Client-side per-request state, filled in by the reader thread."""
+
+    def __init__(self, qid: int):
+        self.qid = qid
+        self.t_submit = time.monotonic()
+        self.t_first: Optional[float] = None    # first TOKENS/DONE arrival
+        self.t_done: Optional[float] = None
+        self.stream: List[int] = []             # TOKENS deltas (best-effort)
+        self.tokens: Optional[np.ndarray] = None  # authoritative, from DONE
+        self.status: Optional[str] = None
+        self.error: Optional[str] = None
+        self.done = threading.Event()
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+class TensorQueryClient:
+    """Blocking client for one tensor-query server connection."""
+
+    def __init__(self, host: str, port: int, connect_timeout: float = 10.0):
+        import socket
+        self.sock = socket.create_connection((host, port),
+                                             timeout=connect_timeout)
+        self.sock.settimeout(None)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._send_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._next_qid = 0
+        self._requests: Dict[int, QueryResult] = {}
+        self._closed = False
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="tq-client-reader", daemon=True)
+        self._reader.start()
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, prompt, lane: str = "interactive",
+               deadline: Optional[float] = None) -> int:
+        """Send one prompt; returns its query id without blocking."""
+        arr = np.asarray(prompt, np.int32).reshape(-1)
+        with self._lock:
+            qid = self._next_qid
+            self._next_qid += 1
+            self._requests[qid] = QueryResult(qid)
+        frame = pack_frame(MSG_REQUEST, qid, pack_tensor(arr),
+                           lane=LANE_CODES[lane],
+                           deadline=0.0 if deadline is None else float(deadline))
+        with self._send_lock:
+            self.sock.sendall(frame)
+        return qid
+
+    def result(self, qid: int,
+               timeout: Optional[float] = 60.0) -> QueryResult:
+        """Block until ``qid``'s DONE/ERROR frame arrives."""
+        with self._lock:
+            res = self._requests[qid]
+        if not res.done.wait(timeout=timeout):
+            raise TimeoutError(f"query {qid} not finished in {timeout}s")
+        return res
+
+    # -- reader -------------------------------------------------------------
+    def _read_loop(self) -> None:
+        try:
+            while not self._closed:
+                frame = read_frame(self.sock)
+                if frame is None:
+                    break
+                msg_type, qid, _lane, status, _deadline, payload = frame
+                with self._lock:
+                    res = self._requests.get(qid)
+                if res is None:
+                    continue
+                now = time.monotonic()
+                if msg_type == MSG_TOKENS:
+                    if res.t_first is None:
+                        res.t_first = now
+                    res.stream.extend(
+                        int(t) for t in unpack_tensor(payload).reshape(-1))
+                elif msg_type == MSG_DONE:
+                    if res.t_first is None:
+                        res.t_first = now
+                    res.t_done = now
+                    res.tokens = np.asarray(unpack_tensor(payload), np.int32)
+                    res.status = STATUS_NAMES.get(status, "error")
+                    res.done.set()
+                elif msg_type == MSG_ERROR:
+                    res.t_done = now
+                    res.status = "error"
+                    res.error = payload.decode("utf-8", "replace")
+                    res.done.set()
+        except (OSError, ConnectionError, ValueError):
+            pass
+        # connection gone: fail everything still in flight
+        with self._lock:
+            pending = [r for r in self._requests.values() if not r.done.is_set()]
+        for res in pending:
+            res.status = "error"
+            res.error = res.error or "connection closed"
+            res.done.set()
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self._reader.join(timeout=2.0)
+
+
+class TensorQueryServer:
+    """Serve a ``ServeEngine`` over TCP through the stream pipeline."""
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 0,
+                 max_batch: Optional[int] = None, max_wait_ms: float = 5.0,
+                 pad_to: Optional[int] = None, workers: int = 4,
+                 queue_size: int = 64, stream: bool = True,
+                 filter_timeout_s: Optional[float] = None):
+        from ..core import elements as E
+        from ..core.pipeline import Pipeline
+        self.engine = engine
+        if max_batch is None:
+            max_batch = engine.batch_size
+        if pad_to is None:
+            pad_to = max(8, engine.capacity - engine.max_new_tokens)
+        self.stream = bool(stream)
+        self._routes: Dict[int, tuple] = {}     # engine rid -> (conn, qid)
+        self._routes_lock = threading.Lock()
+
+        self.src = E.TensorQueryServerSrc("qsrc", host=host, port=port,
+                                          pad_to=pad_to)
+        batcher = E.TensorBatcher("batch", max_batch=max_batch,
+                                  max_wait_ms=max_wait_ms)
+        q = E.Queue("dispatch", max_size=queue_size, workers=workers)
+        filt = E.TensorFilter(
+            "llm", framework="python", max_batch=max_batch, pass_meta=True,
+            fn=engine.as_pipeline_filter(use_meta=True,
+                                         on_submit=self._register,
+                                         timeout_s=filter_timeout_s))
+        unbatch = E.TensorUnbatcher("unbatch")
+        self.sink = E.TensorQueryServerSink("qsink")
+        self.pipeline = (Pipeline("tensor-query-server")
+                         .add(self.src, batcher, q, filt, unbatch, self.sink)
+                         .link("qsrc", "batch", "dispatch", "llm",
+                               "unbatch", "qsink"))
+
+    # -- routing ------------------------------------------------------------
+    def _register(self, rid: int, meta) -> None:
+        q = meta.get("query") if isinstance(meta, dict) else None
+        if isinstance(q, dict) and q.get("conn") is not None:
+            with self._routes_lock:
+                self._routes[rid] = (q["conn"], int(q["qid"]))
+
+    def _on_tokens(self, rid: int, new_tokens) -> None:
+        with self._routes_lock:
+            route = self._routes.get(rid)
+        if route is None:
+            return
+        conn, qid = route
+        conn.send_frame(MSG_TOKENS, qid,
+                        pack_tensor(np.asarray(new_tokens, np.int32)))
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def port(self) -> int:
+        return self.src.port
+
+    def start(self) -> "TensorQueryServer":
+        if self.stream:
+            self.engine.stream_cb = self._on_tokens
+        self.pipeline.start()
+        return self
+
+    def stop(self) -> None:
+        self.pipeline.stop()
+        if self.engine.stream_cb == self._on_tokens:
+            self.engine.stream_cb = None
+        with self._routes_lock:
+            self._routes.clear()

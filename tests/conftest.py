@@ -65,3 +65,26 @@ def family_model(request):
     from repro.models import build_model
     model = build_model(FAMILY_CFGS[request.param])
     return request.param, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jit_code():
+    """Drop compiled executables between test modules.
+
+    Every ServeEngine jits its own megasteps, and each compiled
+    executable holds a handful of small code/data mmaps for the life of
+    its jit wrapper.  Across the full suite that sums to tens of
+    thousands of mappings — enough to cross the kernel's default
+    ``vm.max_map_count`` (65530) mid-run, at which point LLVM's next
+    allocation fails and XLA segfaults inside ``backend_compile``
+    (observed on the big-config compiles in test_decode_consistency).
+    Clearing jax's jit caches at module teardown releases dead engines'
+    executables and keeps the peak map count bounded; live fixtures
+    (models, params) are plain arrays and survive untouched — the next
+    module just recompiles its own engines, which it would do anyway.
+    """
+    yield
+    import gc
+    import jax
+    gc.collect()           # break engine<->closure cycles first
+    jax.clear_caches()

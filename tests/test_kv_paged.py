@@ -116,7 +116,7 @@ def test_allocator_refcount_share_release():
     a.release([b])
     assert a.ref(b) == 0 and a.n_free == 4
     with pytest.raises(ValueError, match="share free"):
-        a.share([b])                   # freed blocks cannot gain refs
+        a.share([b])                   # unregistered freed blocks: no refs
 
 
 def test_allocator_content_table_roundtrip():
@@ -134,12 +134,25 @@ def test_allocator_content_table_roundtrip():
     assert a.lookup_tail(d0, (5, 6)) == b1
     assert a.lookup_tail(d0, (5, 9)) is None
     assert a.n_table == 2
-    # entries never outlive their block
+    # a registered block at refcount 0 is *retained*: its entry (and
+    # KV) stays addressable for future prefix hits...
     a.release([b1])
-    assert a.lookup(d0, toks1) is None
-    assert a.registered_blocks() == {b0}
-    a.release([b0])
-    assert a.n_table == 0 and a.lookup(ROOT_DIGEST, toks0) is None
+    assert a.lookup(d0, toks1) == b1
+    assert a.retained_blocks() == {b1}
+    assert a.n_free == 3               # retained blocks count as free
+    # ...and share() resurrects it off the free list
+    a.share([b1])
+    assert a.ref(b1) == 1 and a.n_retained == 0
+    a.release([b0, b1])
+    assert a.n_retained == 2 and a.n_table == 2
+    # recycling is what finally unregisters — plain free blocks go
+    # first, then retained blocks oldest-first (LRU)
+    a.acquire(2)                       # the two never-registered blocks
+    assert a.n_table == 2
+    (got,) = a.acquire(1)
+    assert got == b0                   # b0 was released before b1
+    assert a.lookup(ROOT_DIGEST, toks0) is None
+    assert a.lookup(d0, toks1) == b1
 
 
 def test_allocator_register_guards():
@@ -219,12 +232,20 @@ def _run_alloc_sequence(ops):
         for b, r in refs.items():
             assert a.ref(b) == r
         assert a.n_shared == sum(1 for r in refs.values() if r > 1)
-        assert a.registered_blocks() <= set(refs), \
+        # every table entry points at a live block or a retained one —
+        # never at a recycled (rewritable) block
+        assert a.registered_blocks() <= set(refs) | a.retained_blocks(), \
             "content-table entry outlived its block"
+        assert not a.retained_blocks() & set(refs), \
+            "retained block still has references"
     for g in groups:
         a.release(g)
     assert a.n_free == a.num_blocks and a.n_live == 0
-    assert a.n_table == 0
+    # drained: every surviving table entry is a retained block, and
+    # recycling the whole pool unregisters them all
+    assert a.n_table == a.n_retained
+    a.release(a.acquire(a.num_blocks))
+    assert a.n_table == 0 and a.n_retained == 0
     # fully drained: nothing is double-releasable
     with pytest.raises(ValueError):
         a.release([0])
@@ -678,10 +699,12 @@ def test_prefix_sharing_bit_identical_and_fewer_blocks(tiny_model):
     assert peak_on < peak_off
     assert any(live < need for active, live, need in occ_on if active == 4)
     assert all(live >= need for _, live, need in occ_off)
-    # everything drains: refcounts, reservations, content table
+    # everything drains: refcounts and reservations return to zero; table
+    # entries for retained (refcount-0, reusable) blocks survive the drain
     for eng in (eng_on, eng_off):
         assert eng.allocator.n_free == eng.allocator.num_blocks
-        assert eng.allocator.n_table == 0 and eng._reserved == 0
+        assert eng.allocator.n_table == eng.allocator.n_retained
+        assert eng._reserved == 0
 
 
 def test_cow_fork_isolates_identical_prompts(tiny_model):

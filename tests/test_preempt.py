@@ -1,0 +1,126 @@
+"""Preemption spill/restore conformance — the cross-family matrix.
+
+A batch-lane slot preempted mid-decode has its KV pages and recurrent
+state slab spilled to host memory and is re-admitted later into
+whatever physical blocks are free.  Because attention reads go through
+the page table, recurrent state rides the slot's slab, and sampler
+keys are a pure function of (request, step), the restored request must
+produce tokens — and per-step logits — *bit-identical* to a run that
+was never preempted.  Checked for every serving family (transformer,
+mamba, xLSTM, hybrid) via the ``family_model`` matrix axis.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import ServeEngine
+
+from test_kv_paged import TINY, _fresh_dense_tokens
+
+
+def _serve_traced(model, params, prompts, *, preempt_rid=None,
+                  after_tokens=2, mid_prefill=False, prefill_chunk=16,
+                  temperature=0.0, top_k=None, seed=0):
+    """Serve ``prompts`` on the paged engine, optionally preempting one
+    request once (mid-decode after ``after_tokens`` tokens, or while
+    still mid-prefill)."""
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=8, block_size=4,
+                      prefill_chunk=prefill_chunk, trace_logits=True,
+                      temperature=temperature, top_k=top_k, seed=seed)
+    assert eng.paged
+    for p in prompts:
+        eng.submit(p, lane="batch")
+    pending_preempt = preempt_rid is not None
+    results = []
+    while eng.has_work:
+        if pending_preempt:
+            for s in eng._slots:
+                if s is None or s.rid != preempt_rid:
+                    continue
+                prefilled = s.prefill_off >= len(s.prompt)
+                if mid_prefill and not prefilled and not s.tokens:
+                    assert eng.preempt(preempt_rid)
+                    pending_preempt = False
+                elif (not mid_prefill and prefilled
+                      and len(s.tokens) >= after_tokens):
+                    assert eng.preempt(preempt_rid)
+                    pending_preempt = False
+                break
+        results += eng.step()
+    assert not pending_preempt, "never caught the slot in the target phase"
+    return eng, {r.request_id: r for r in results}
+
+
+def _assert_traces_equal(eng_a, eng_b, family):
+    assert set(eng_a.logit_trace) == set(eng_b.logit_trace)
+    for rid, trace in eng_a.logit_trace.items():
+        other = eng_b.logit_trace[rid]
+        assert len(trace) == len(other), (family, rid)
+        for step, (x, y) in enumerate(zip(trace, other)):
+            assert np.array_equal(x, y), \
+                f"{family}: rid {rid} logits diverged at step {step}"
+
+
+def test_preempt_restore_bit_identical_greedy(family_model):
+    family, model, params = family_model
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+               for n in (8, 6)]
+    ref_eng, ref = _serve_traced(model, params, prompts)
+    pre_eng, pre = _serve_traced(model, params, prompts, preempt_rid=0)
+    assert pre_eng.n_preemptions == 1 and pre_eng.n_restores == 1
+    for rid in ref:
+        assert list(pre[rid].tokens) == list(ref[rid].tokens), (family, rid)
+        assert pre[rid].status == "ok"
+    _assert_traces_equal(ref_eng, pre_eng, family)
+    # and both agree with the dense oracle
+    for rid, p in enumerate(prompts):
+        assert list(ref[rid].tokens) == \
+            _fresh_dense_tokens(model, params, p, 8), family
+
+
+def test_preempt_restore_bit_identical_sampled(family_model):
+    """Sampler keys fold (seed, request, step) — independent of where
+    the request's pages live or whether it was ever spilled."""
+    family, model, params = family_model
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+               for n in (7, 9)]
+    kw = dict(temperature=0.8, top_k=8, seed=3)
+    ref_eng, ref = _serve_traced(model, params, prompts, **kw)
+    pre_eng, pre = _serve_traced(model, params, prompts, preempt_rid=1,
+                                 after_tokens=3, **kw)
+    assert pre_eng.n_preemptions == 1 and pre_eng.n_restores == 1
+    for rid in ref:
+        assert list(pre[rid].tokens) == list(ref[rid].tokens), (family, rid)
+    _assert_traces_equal(ref_eng, pre_eng, family)
+
+
+def test_preempt_mid_prefill_restarts_deterministically(family_model):
+    """A slot spilled before its first token has no generated state
+    worth keeping: it is restarted (fresh admission, no spill payload),
+    and re-prefilling is deterministic, so the output is unchanged."""
+    family, model, params = family_model
+    rng = np.random.default_rng(19)
+    prompts = [rng.integers(1, TINY.vocab_size, 12).astype(np.int32)]
+    pre_eng, pre = _serve_traced(model, params, prompts, preempt_rid=0,
+                                 mid_prefill=True, prefill_chunk=4)
+    assert pre_eng.n_preemptions == 1
+    assert pre_eng.n_restores == 0     # restart, not restore
+    assert list(pre[0].tokens) == \
+        _fresh_dense_tokens(model, params, prompts[0], 8), family
+
+
+def test_preempt_pool_accounting_clean(family_model):
+    """Spill + restore must leave no leaked blocks, reservations, or
+    state slabs once everything drains."""
+    family, model, params = family_model
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+               for n in (8, 5)]
+    eng, res = _serve_traced(model, params, prompts, preempt_rid=0)
+    assert all(r.status == "ok" for r in res.values())
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+    assert eng._reserved == 0
+    if eng.state_store is not None:
+        assert eng.state_store.n_live == 0, family

@@ -1,0 +1,97 @@
+"""Loopback tensor_query front door: client <-> server over TCP.
+
+Uses the deterministic ToyModel from test_serve_continuous so expected
+token sequences are known in closed form and no jit compilation beyond
+the toy cache ops is required.
+"""
+import numpy as np
+import pytest
+
+from repro.core.elements.query import (MSG_ERROR, MSG_REQUEST, STATUS_CODES,
+                                       pack_frame, pack_tensor, read_frame,
+                                       unpack_tensor)
+from repro.serving import ServeEngine, TensorQueryClient, TensorQueryServer
+
+from test_serve_continuous import ToyModel, _expected
+
+
+@pytest.fixture()
+def server():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=4, capacity=64,
+                      max_new_tokens=6)
+    srv = TensorQueryServer(eng, max_wait_ms=5.0, pad_to=16).start()
+    yield eng, srv
+    srv.stop()
+
+
+def test_loopback_roundtrip_streams_and_completes(server):
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    prompts = [np.arange(1, n + 2, dtype=np.int32) for n in range(5)]
+    qids = [cli.submit(p) for p in prompts]
+    for p, q in zip(prompts, qids):
+        r = cli.result(q, timeout=60)
+        assert r.status == "ok"
+        assert list(r.tokens) == _expected(p, 6)
+        # streamed deltas reassemble to the DONE sequence, and TTFT was
+        # measured on the first TOKENS frame, before completion
+        assert r.stream == list(r.tokens)
+        assert r.ttft_s is not None and r.ttft_s <= r.latency_s
+    cli.close()
+    assert srv.sink.n_sent == 5
+    assert srv.src.n_requests == 5
+
+
+def test_loopback_lanes_and_many_clients(server):
+    eng, srv = server
+    clients = [TensorQueryClient("127.0.0.1", srv.port) for _ in range(3)]
+    qids = []
+    for i, cli in enumerate(clients):
+        p = np.asarray([i + 1, i + 2], np.int32)
+        qids.append((cli, p, cli.submit(p, lane="batch" if i % 2 else
+                                        "interactive")))
+    for cli, p, q in qids:
+        r = cli.result(q, timeout=60)
+        assert r.status == "ok"
+        assert list(r.tokens) == _expected(p, 6)
+    for cli in clients:
+        cli.close()
+    # qids are connection-scoped: all three clients used qid 0
+    assert [q for _, _, q in qids] == [0, 0, 0]
+
+
+def test_oversized_prompt_rejected_with_error_frame(server):
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    qid = cli.submit(np.ones(17, np.int32))        # pad_to is 16
+    r = cli.result(qid, timeout=10)
+    assert r.status == "error"
+    assert "outside" in r.error
+    ok = cli.submit(np.asarray([2, 3], np.int32))  # connection still usable
+    assert cli.result(ok, timeout=60).status == "ok"
+    cli.close()
+    assert srv.src.n_rejected == 1
+
+
+def test_wire_format_roundtrip():
+    arr = np.arange(12, dtype=np.int32).reshape(3, 4)
+    assert np.array_equal(unpack_tensor(pack_tensor(arr)), arr)
+    f32 = np.linspace(0, 1, 5, dtype=np.float32)
+    out = unpack_tensor(pack_tensor(f32))
+    assert out.dtype == np.float32 and np.array_equal(out, f32)
+    frame = pack_frame(MSG_REQUEST, 7, pack_tensor(f32), lane=1,
+                       deadline=0.25)
+
+    class _FakeSock:
+        def __init__(self, data):
+            self.data, self.off = data, 0
+
+        def recv(self, n):
+            part = self.data[self.off:self.off + n]
+            self.off += len(part)
+            return part
+
+    msg, qid, lane, status, deadline, payload = read_frame(_FakeSock(frame))
+    assert (msg, qid, lane, status) == (MSG_REQUEST, 7, 1, 0)
+    assert deadline == 0.25
+    assert np.array_equal(unpack_tensor(payload), f32)

@@ -1,0 +1,221 @@
+"""Priority-aware scheduler: head-of-line fix, lanes, deadlines,
+timeout semantics, automatic preemption, and prefix reuse across
+evictions.
+
+The paged tests run the tiny transformer from test_kv_paged (real
+block accounting); the lane/timeout tests run the deterministic
+ToyModel (dense path) where closed-form expected tokens make ordering
+assertions exact.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+from test_kv_paged import TINY, _fresh_dense_tokens
+from test_serve_continuous import ToyModel, _expected
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _rng_prompt(rng, n):
+    return rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+
+
+# -- head-of-line blocking (the seed bug) -------------------------------------
+
+def test_small_request_admits_past_blocked_big_one(tiny_model):
+    """Regression for FIFO head-of-line admission: a queued request too
+    big for the current pool headroom must not block a smaller request
+    behind it.  The seed engine admitted from the queue head only, so
+    SMALL would have waited for BIG here."""
+    model, params = tiny_model
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4, num_blocks=5,
+                      prefill_chunk=16)
+    a = _rng_prompt(rng, 8)       # 3-page worst case: fits, keeps 2 free
+    big = _rng_prompt(rng, 16)    # 5-page worst case: blocked while A lives
+    small = _rng_prompt(rng, 4)   # 2-page worst case: fits alongside A
+    rid_a = eng.submit(a)
+    while eng.n_active < 1:
+        eng.step()
+    rid_big = eng.submit(big)
+    rid_small = eng.submit(small)
+    # SMALL gets a slot while BIG is still queued
+    for _ in range(50):
+        eng.step()
+        active = {s.rid for s in eng._slots if s is not None}
+        if rid_small in active:
+            break
+    else:
+        pytest.fail("small request never admitted past the blocked big one")
+    assert eng.scheduler.n_queued() == 1          # big still waiting
+    results = {r.request_id: r for r in eng.wait([rid_a, rid_big, rid_small],
+                                                 timeout_s=120)}
+    assert all(r.status == "ok" for r in results.values())
+    for rid, prompt in ((rid_a, a), (rid_big, big), (rid_small, small)):
+        assert list(results[rid].tokens) == \
+            _fresh_dense_tokens(model, params, prompt, 4)
+
+
+def test_impossible_request_fails_oom_not_wedged(tiny_model):
+    """A request that cannot fit even an empty pool fails fast with
+    status 'oom' instead of wedging the queue forever."""
+    model, params = tiny_model
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4, num_blocks=3,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(8)
+    huge = _rng_prompt(rng, 16)            # 5 pages > 3-block pool
+    ok = _rng_prompt(rng, 4)
+    res = {r.request_id: r
+           for r in eng.serve([huge, ok], timeout_s=120)}
+    assert res[0].status == "oom" and len(res[0].tokens) == 0
+    assert res[1].status == "ok"
+    assert list(res[1].tokens) == _fresh_dense_tokens(model, params, ok, 4)
+
+
+# -- lanes --------------------------------------------------------------------
+
+def test_interactive_lane_admits_before_earlier_batch_work():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=1, capacity=64,
+                      max_new_tokens=4)
+    b1 = eng.submit(np.asarray([2, 3], np.int32), lane="batch")
+    while eng.n_active < 1:
+        eng.step()
+    b2 = eng.submit(np.asarray([4, 5], np.int32), lane="batch")
+    i1 = eng.submit(np.asarray([6, 7], np.int32), lane="interactive")
+    order = []
+    while eng.has_work:
+        order.extend(r.request_id for r in eng.step())
+    # interactive submitted after b2 but finishes before it
+    assert order.index(i1) < order.index(b2)
+    res = eng.wait([b1, b2, i1], timeout_s=10)
+    assert [list(r.tokens) for r in res] == [
+        _expected(np.asarray(p, np.int32), 4)
+        for p in ([2, 3], [4, 5], [6, 7])]
+
+
+def test_unknown_lane_rejected():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=1, capacity=64,
+                      max_new_tokens=4)
+    with pytest.raises(ValueError, match="unknown lane"):
+        eng.submit(np.asarray([1, 2], np.int32), lane="bulk")
+
+
+# -- deadlines ----------------------------------------------------------------
+
+def test_queued_request_expires_past_deadline():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=1, capacity=64,
+                      max_new_tokens=8)
+    occupant = eng.submit(np.asarray([30, 31], np.int32))
+    while eng.n_active < 1:
+        eng.step()
+    doomed = eng.submit(np.asarray([5, 6], np.int32), deadline=0.001)
+    time.sleep(0.01)
+    res = {r.request_id: r for r in eng.wait([occupant, doomed],
+                                             timeout_s=30)}
+    assert res[doomed].status == "expired"
+    assert len(res[doomed].tokens) == 0
+    assert res[occupant].status == "ok"
+    assert eng.n_expired == 1
+
+
+def test_admitted_request_is_immune_to_its_deadline():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=2, capacity=64,
+                      max_new_tokens=6)
+    rid = eng.submit(np.asarray([2, 3], np.int32), deadline=30.0)
+    (res,) = eng.wait([rid], timeout_s=30)
+    assert res.status == "ok"
+    assert res.ttft_s is not None and res.ttft_s < 30.0
+
+
+# -- serve/wait timeout semantics ---------------------------------------------
+
+def test_wait_timeout_returns_partial_tokens_not_raise():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=1, capacity=64,
+                      max_new_tokens=40)
+    rid = eng.submit(np.asarray([2, 3], np.int32))
+    for _ in range(6):                 # generate a few tokens, then stop
+        eng.step()
+    (res,) = eng.wait([rid], timeout_s=0.0)
+    assert res.status == "timeout"
+    assert 0 < len(res.tokens) < 40    # partial output is preserved
+    assert list(res.tokens) == _expected(
+        np.asarray([2, 3], np.int32), len(res.tokens))
+    # the pool is clean: the engine serves the next request normally
+    nxt = eng.serve([np.asarray([4, 5], np.int32)], timeout_s=30)
+    assert nxt[0].status == "ok"
+    assert eng.n_active == 0
+
+
+def test_serve_timeout_fails_queued_requests_without_dropping():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=1, capacity=64,
+                      max_new_tokens=4)
+    prompts = [np.asarray([k, k + 1], np.int32) for k in (2, 4, 6)]
+    res = eng.serve(prompts, timeout_s=0.0)
+    assert len(res) == 3               # nothing dropped
+    assert all(r.status == "timeout" for r in res)
+    again = eng.serve(prompts, timeout_s=60)
+    assert [r.status for r in again] == ["ok"] * 3
+    assert [list(r.tokens) for r in again] == [_expected(p, 4)
+                                               for p in prompts]
+
+
+# -- automatic preemption -----------------------------------------------------
+
+def test_interactive_preempts_running_batch_slot(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(9)
+    eng = ServeEngine(model, params, batch_size=1, capacity=32,
+                      max_new_tokens=6, block_size=4, num_blocks=8,
+                      prefill_chunk=16)
+    bp = _rng_prompt(rng, 8)
+    ip = _rng_prompt(rng, 8)
+    rid_b = eng.submit(bp, lane="batch")
+    while not (eng._slots[0] is not None and eng._slots[0].tokens):
+        eng.step()                     # batch slot is mid-decode
+    rid_i = eng.submit(ip, lane="interactive")
+    res = {r.request_id: r for r in eng.wait([rid_b, rid_i], timeout_s=120)}
+    assert eng.n_preemptions >= 1 and eng.n_restores >= 1
+    assert res[rid_i].status == "ok" and res[rid_b].status == "ok"
+    # the preempted batch request restored bit-identically: its tokens
+    # match a never-preempted dense run of the same prompt
+    assert list(res[rid_b].tokens) == \
+        _fresh_dense_tokens(model, params, bp, 6)
+    assert list(res[rid_i].tokens) == \
+        _fresh_dense_tokens(model, params, ip, 6)
+    # interactive got the slot first despite arriving second
+    assert res[rid_i].ttft_s is not None
+
+
+# -- prefix reuse across evictions (the seed bug) -----------------------------
+
+def test_prefix_reuse_survives_full_drain(tiny_model):
+    """Retained blocks: re-submitting a prompt after its original has
+    finished and been evicted still maps the registered prefix pages.
+    The seed freed registered blocks on release, so the second run
+    re-prefilled from scratch (n_prefix_hits stayed 0)."""
+    model, params = tiny_model
+    rng = np.random.default_rng(11)
+    prompt = _rng_prompt(rng, 8)       # 2 full pages
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=6, block_size=4, prefill_chunk=16)
+    first = eng.serve([prompt], timeout_s=120)
+    assert eng.n_prefix_hits == 0
+    assert eng.n_active == 0 and eng.allocator.n_live == 0   # fully drained
+    second = eng.serve([prompt.copy()], timeout_s=120)
+    assert eng.n_prefix_hits == 1
+    assert eng.n_shared_tokens == len(prompt) - 1
+    oracle = _fresh_dense_tokens(model, params, prompt, 6)
+    assert list(first[0].tokens) == oracle
+    assert list(second[0].tokens) == oracle   # resurrection kept KV intact
