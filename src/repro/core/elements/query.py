@@ -33,11 +33,12 @@ consumed by ``ServeEngine.as_pipeline_filter(use_meta=True)`` and
 """
 from __future__ import annotations
 
+import collections
 import socket
 import struct
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -125,31 +126,79 @@ def read_frame(sock: socket.socket
 
 
 class QueryConnection:
-    """One accepted client connection; sends are serialized by a lock so
-    the sink thread and the engine's streaming callback never interleave
-    frames."""
+    """One accepted client connection with a bounded, non-blocking
+    outbound path.
 
-    def __init__(self, sock: socket.socket, addr):
+    ``send_frame`` only *enqueues*: a dedicated writer thread drains the
+    per-connection queue into the socket, so a slow or dead client can
+    never stall the caller — in particular the engine's streaming
+    callback, which fires from inside the decode/drain path and must
+    return immediately for every other resident slot's sake.  The queue
+    is bounded: best-effort TOKENS deltas are dropped on overflow
+    (``n_dropped`` counts them; the DONE frame carries the authoritative
+    full sequence), while terminal DONE/ERROR frames always enqueue
+    (their number is bounded by requests in flight).  A failed socket
+    write marks the connection dead and discards the backlog; frame
+    order is preserved because the writer is the sole sender.
+    """
+
+    def __init__(self, sock: socket.socket, addr, max_outbound: int = 256):
         self.sock = sock
         self.addr = addr
         self.alive = True
-        self._send_lock = threading.Lock()
+        self.max_outbound = int(max_outbound)
+        self.n_dropped = 0
+        self._q: collections.deque = collections.deque()
+        self._q_lock = threading.Lock()
+        self._q_event = threading.Event()
+        self._writer = threading.Thread(
+            target=self._write_loop, name=f"qconn:{addr}:writer", daemon=True)
+        self._writer.start()
 
     def send_frame(self, msg_type: int, qid: int, payload: bytes = b"", *,
                    status: int = 0) -> bool:
+        """Enqueue one frame for the writer thread; never blocks.
+        Returns False if the connection is dead or a best-effort TOKENS
+        frame was dropped on queue overflow."""
         if not self.alive:
             return False
         frame = pack_frame(msg_type, qid, payload, status=status)
-        try:
-            with self._send_lock:
+        with self._q_lock:
+            if len(self._q) >= self.max_outbound and msg_type == MSG_TOKENS:
+                self.n_dropped += 1
+                return False
+            self._q.append(frame)
+        self._q_event.set()
+        return True
+
+    @property
+    def n_outbound(self) -> int:
+        """Frames queued but not yet written to the socket."""
+        with self._q_lock:
+            return len(self._q)
+
+    def _write_loop(self) -> None:
+        while True:
+            with self._q_lock:
+                frame = self._q.popleft() if self._q else None
+                if frame is None:
+                    self._q_event.clear()
+            if frame is None:
+                if not self.alive:
+                    return
+                self._q_event.wait(timeout=0.5)
+                continue
+            try:
                 self.sock.sendall(frame)
-            return True
-        except OSError:
-            self.alive = False
-            return False
+            except OSError:
+                self.alive = False
+                with self._q_lock:
+                    self._q.clear()
+                return
 
     def close(self) -> None:
         self.alive = False
+        self._q_event.set()             # wake the writer so it can exit
         try:
             self.sock.shutdown(socket.SHUT_RDWR)
         except OSError:
@@ -298,11 +347,18 @@ class TensorQueryServerSink(Element):
     whose meta carries the ``query`` routing dict from
     ``TensorQueryServerSrc`` plus the ``status`` / ``n_tokens`` fields
     the engine filter wrote back.  Buffers without routing metadata are
-    counted and dropped (e.g. locally injected test traffic)."""
+    counted and dropped (e.g. locally injected test traffic).
 
-    def __init__(self, name: str):
+    ``on_done(meta)`` — if given — fires after the terminal frame is
+    handed to the connection, whether or not the send succeeded; the
+    server uses it to drop its (request -> connection) route the moment
+    a request reaches a terminal state."""
+
+    def __init__(self, name: str,
+                 on_done: Optional[Callable[[Dict[str, Any]], None]] = None):
         super().__init__(name)
         self.add_sink_pad()
+        self.on_done = on_done
         self.n_sent = 0
         self.n_unroutable = 0
         self.eos_seen = threading.Event()
@@ -328,3 +384,5 @@ class TensorQueryServerSink(Element):
         if not conn.send_frame(MSG_DONE, int(q["qid"]), pack_tensor(tokens),
                                status=status):
             self.n_sent -= 1          # connection died under the send
+        if self.on_done is not None:
+            self.on_done(buf.meta)    # terminal: the route is dead either way

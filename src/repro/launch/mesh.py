@@ -20,6 +20,24 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_serving_mesh(model: int = 1):
+    """Pure tensor-parallel ``(1, model)`` mesh for the paged serving
+    engine, over the first ``model`` devices.
+
+    Serving keeps the data axis at size 1 on purpose: the engine's slot
+    batch is tiny and host-scheduled, so sharding it would only force
+    uneven batch splits through the model's internal batch constraints,
+    while the weight/KV tensor axes are where the memory and FLOPs
+    actually live.  ``model`` must not exceed the device count."""
+    import numpy as np
+    devs = jax.devices()
+    if model < 1 or model > len(devs):
+        raise ValueError(
+            f"make_serving_mesh(model={model}): have {len(devs)} device(s)")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:model]).reshape(1, model), ("data", "model"))
+
+
 def dp_axes(mesh) -> tuple:
     """The FSDP/batch axes of a mesh (everything except "model")."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -105,6 +105,21 @@ def main():
     ap.add_argument("--max-wait-ms-net", type=float, default=5.0,
                     help="--listen: micro-batch window of the server-side "
                          "tensor_batcher")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="serve tensor-parallel over the first N devices "
+                         "(a (1, N) data×model mesh; paged mode only). "
+                         "Weights shard by the training PartitionSpec "
+                         "rules, the paged KV pool shards head_dim, and "
+                         "decode output is token-identical to N=1. "
+                         "On CPU, simulate devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--retain-cap", type=int, default=None,
+                    help="paged mode: cap on retained (prefix-reusable) "
+                         "free blocks; the oldest are retired beyond it "
+                         "(default: unbounded)")
+    ap.add_argument("--retain-ttl-s", type=float, default=None,
+                    help="paged mode: retire retained blocks older than "
+                         "this many seconds (default: no TTL)")
     ap.add_argument("--burst", type=int, default=8,
                     help="decode burst length K: fused device steps per "
                          "host round-trip when no admissions/prefills are "
@@ -122,6 +137,12 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     tri = {"auto": None, "on": True, "off": False}
+    mesh = None
+    if args.mesh is not None:
+        from .mesh import make_serving_mesh
+        mesh = make_serving_mesh(model=args.mesh)
+        print(f"serving over mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}"
+              f" ({jax.device_count()} device(s) visible)")
     engine = ServeEngine(model, params, batch_size=args.batch,
                          capacity=args.prompt_len + args.max_new + 8,
                          max_new_tokens=args.max_new,
@@ -133,7 +154,9 @@ def main():
                          num_state_slots=args.num_state_slots,
                          burst=args.burst,
                          temperature=args.temperature,
-                         top_k=args.top_k, seed=args.seed)
+                         top_k=args.top_k, seed=args.seed,
+                         mesh=mesh, retain_cap=args.retain_cap,
+                         retain_ttl_s=args.retain_ttl_s)
 
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1")

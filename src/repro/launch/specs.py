@@ -16,7 +16,7 @@ from ..configs.shapes import SHAPES, InputShape
 from ..models import build_model
 from ..models.config import ModelConfig
 from ..models.frontends import audio_frames_shape, vision_patches_shape
-from ..models.sharding import cache_specs, param_specs
+from ..models.sharding import cache_specs, paged_cache_specs, param_specs
 from ..optim import adamw_init
 from ..training.trainer import TrainState, make_train_step
 from .mesh import dp_axes
@@ -88,6 +88,22 @@ def cache_structs_and_shardings(model, mesh, batch: int, capacity: int,
         lambda: model.init_cache(batch, capacity, dtype=cache_dtype))
     cspecs = cache_specs(cache_s, dp=dp, shard_seq_when_batch1=(batch == 1),
                          axis_sizes=_axis_sizes(mesh))
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    return cache_s, shardings
+
+
+def paged_cache_structs_and_shardings(model, mesh, num_blocks: int,
+                                      block_size: int,
+                                      num_state_slots: int = 0,
+                                      cache_dtype=jnp.bfloat16):
+    """eval_shape the serving engine's paged pool and build its sharding
+    tree (block/slot axes replicated, feature dims on "model" — see
+    ``paged_cache_specs``)."""
+    cache_s = jax.eval_shape(
+        lambda: model.init_paged_cache(num_blocks, block_size,
+                                       dtype=cache_dtype,
+                                       num_state_slots=num_state_slots))
+    cspecs = paged_cache_specs(cache_s, axis_sizes=_axis_sizes(mesh))
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
     return cache_s, shardings
 

@@ -345,12 +345,18 @@ def gqa_paged_step(p, cfg: ModelConfig, x, k_store, v_store, page_table,
     table *before* the gather, so in-chunk causal self-attention falls
     out of the position mask.  Returns (out (B,T,D), k_store, v_store).
     """
+    from .sharding import constrain
     B, T, _ = x.shape
     positions = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
     q, k, v = _project_qkv(p, cfg, x)
     q, k = _rope_qk(cfg, q, k, positions)
     k_store = paged_scatter(k_store, k, page_table, lengths, t_valid)
     v_store = paged_scatter(v_store, v, page_table, lengths, t_valid)
+    # under a mesh: the pool stays block-replicated / head_dim-sharded
+    # through the scatter, so XLA never resorts to resharding the whole
+    # pool around the donated update (no-op without a mesh context)
+    k_store = constrain(k_store, None, None, None, "model")
+    v_store = constrain(v_store, None, None, None, "model")
     out = paged_attention(q, paged_gather(k_store, page_table),
                           paged_gather(v_store, page_table), positions)
     return out.reshape(B, T, -1) @ p["wo"], k_store, v_store

@@ -191,6 +191,48 @@ def cache_specs(cache, dp=("data",), shard_seq_when_batch1: bool = True,
     return jax.tree_util.tree_map_with_path(spec_of, cache)
 
 
+def paged_cache_specs(cache, axis_sizes=None):
+    """PartitionSpec pytree for the serving engine's *paged* pool.
+
+    Unlike the dense decode cache (``cache_specs``), the paged layout
+    has no batch axis to data-shard: attention leaves are a single
+    shared pool ``(num_blocks, block_size, KV, hd)`` addressed by
+    host-side page tables, and recurrent slabs are ``(num_slots, ...)``
+    addressed by host-side slot ids.  The block/slot axis must stay
+    **replicated** — every device needs every page resident so a slot's
+    page table works unchanged wherever its blocks landed — and tensor
+    parallelism shards the *feature* dims on "model": head_dim for KV
+    (KV head counts are too small to divide a large model axis),
+    d_inner for mamba/xLSTM slab state.  Periodic stacked leaves (scan
+    over layers) carry a leading replicated period dim.
+    """
+
+    def spec_of(path, leaf):
+        s = _path_str(path)
+        stacked = "blocks/" in s or s.startswith("blocks")
+        lead = (None,) if stacked else ()
+        name = s.rsplit("/", 1)[-1]
+        rank = leaf.ndim - len(lead)
+        if leaf.ndim == 0 or rank <= 0:
+            return P(*((None,) * leaf.ndim))
+        if name in ("k", "v"):           # (nb, bs, KV, hd): shard head_dim
+            spec = (None, None, None, "model")
+        elif name == "conv":             # (ns, dc-1, di)
+            spec = (None, None, "model")
+        elif name == "ssm":              # (ns, di, d_state)
+            spec = (None, "model", None)
+        elif name in ("h", "cs", "ns", "ms"):  # slstm (ns, di)
+            spec = (None, "model")
+        else:                            # mlstm C/n/m (head dims too small)
+            spec = (None,) * rank
+        spec = lead + spec
+        spec = spec[: leaf.ndim] + (None,) * max(leaf.ndim - len(spec), 0)
+        spec = _filter_divisible(spec, leaf.shape, axis_sizes)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
 def _context_mesh():
     """The mesh installed by ``with mesh:`` (None outside a context)."""
     try:

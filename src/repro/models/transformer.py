@@ -624,7 +624,8 @@ class TransformerLM:
         return self.supports_paged() and not self.has_recurrent_state()
 
     def init_paged_cache(self, num_blocks: int, block_size: int,
-                         dtype=jnp.bfloat16, num_state_slots: int = 0):
+                         dtype=jnp.bfloat16, num_state_slots: int = 0,
+                         shardings=None):
         """Shared block pool + recurrent state slabs.
 
         Every attn layer gets (nb, bs, KV, hd) K/V stores with no batch
@@ -633,6 +634,11 @@ class TransformerLM:
         ``num_state_slots`` axis — slots own exactly one slab each (the
         engine's ``StateStore`` hands them out).  Periodic layers stack
         either kind on a leading scan axis.
+
+        ``shardings`` (a matching pytree of ``jax.sharding.Sharding``,
+        see :func:`repro.models.sharding.paged_cache_specs`) places each
+        leaf at creation, so a mesh-sharded pool never materializes
+        single-device first.
         """
         cfg = self.cfg
         if not self.supports_paged():
@@ -661,6 +667,8 @@ class TransformerLM:
                 lambda a: jnp.broadcast_to(
                     a[None], (self.n_periods,) + a.shape).copy(), one)
         cache["blocks"] = blocks
+        if shardings is not None:
+            cache = jax.device_put(cache, shardings)
         return cache
 
     def copy_paged_block(self, cache, src, dst):

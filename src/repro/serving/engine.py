@@ -93,7 +93,9 @@ single-stepping by construction.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import inspect
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -179,7 +181,9 @@ class ServeEngine:
                  num_blocks: Optional[int] = None, prefill_chunk: int = 32,
                  share_prefix: Optional[bool] = None,
                  num_state_slots: Optional[int] = None,
-                 burst: int = 1, trace_logits: bool = False):
+                 burst: int = 1, trace_logits: bool = False,
+                 mesh=None, retain_cap: Optional[int] = None,
+                 retain_ttl_s: Optional[float] = None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -208,6 +212,32 @@ class ServeEngine:
                 f"paged=True but {type(model).__name__} does not implement "
                 "init_paged_cache/paged_step (or supports_paged() is False)")
         self.paged = has_paged if paged is None else bool(paged)
+        # tensor-parallel serving over a device mesh: weights are placed
+        # by the repo's PartitionSpec rules (heads/FFN/vocab on "model",
+        # FSDP over the remaining axes), the paged pool gets
+        # head-sharded leaves (see paged_cache_specs), and all host-
+        # mirrored slot state is replicated.  The jitted megasteps run
+        # unchanged — committed input shardings propagate through them,
+        # and every serving entry point enters `with mesh:` so the
+        # model's internal with_sharding_constraints activate.
+        self.mesh = mesh
+        self._replicated = None
+        if mesh is not None:
+            if not self.paged:
+                raise ValueError(
+                    "mesh= requires paged mode: tensor-parallel serving "
+                    "shards the paged block pool (the dense per-slot cache "
+                    "has no sharded layout)")
+            from jax.sharding import NamedSharding, PartitionSpec
+            from ..models.sharding import param_specs
+            axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            dp = tuple(a for a in mesh.axis_names if a != "model") \
+                or ("data",)
+            pspecs = param_specs(params, dp=dp, axis_sizes=axis_sizes)
+            self.params = jax.device_put(
+                params,
+                jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs))
+            self._replicated = NamedSharding(mesh, PartitionSpec())
         self._prefill = jax.jit(make_prefill_step(model, capacity, cache_dtype),
                                 static_argnames=())
         self._decode = jax.jit(make_decode_step(model, greedy=True))
@@ -272,7 +302,9 @@ class ServeEngine:
         self._pages_per_slot = -(-capacity // block_size)
         if num_blocks is None:
             num_blocks = batch_size * self._pages_per_slot
-        self.allocator = BlockAllocator(num_blocks, block_size) \
+        self.allocator = BlockAllocator(num_blocks, block_size,
+                                        retain_cap=retain_cap,
+                                        retain_ttl_s=retain_ttl_s) \
             if self.paged else None
         # recurrent families: per-slot state slabs beside the block pool
         needs_state = self.paged and bool(
@@ -335,7 +367,11 @@ class ServeEngine:
                 donate_argnums=(1, 2))
         # device-resident slot state: uploaded only after structural
         # host mutations, otherwise mutated in-jit and adopted back
-        self._dev = DeviceSlotState()
+        # (replicated over the mesh — page tables / lengths / tokens are
+        # global control state every device must see in full)
+        self._dev = DeviceSlotState(
+            put=(lambda v: jax.device_put(np.asarray(v), self._replicated))
+            if mesh is not None else None)
         # scheduler counters
         self.n_batches = 0            # prefill launches (back-compat alias)
         self.n_requests = 0
@@ -366,6 +402,11 @@ class ServeEngine:
         B, S = prompts.shape
         assert B == self.batch_size, (B, self.batch_size)
         t0 = time.perf_counter()
+        with self._sharding_ctx():
+            return self._generate_batch_impl(prompts, extra_embeds, t0)
+
+    def _generate_batch_impl(self, prompts, extra_embeds, t0):
+        B, S = prompts.shape
         logits, cache = self._prefill(self.params, jnp.asarray(prompts),
                                       extra_embeds)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -478,12 +519,23 @@ class ServeEngine:
                 pass
         return out
 
+    def _sharding_ctx(self):
+        """Mesh context for the jitted serving paths.  Tracing under
+        ``with mesh:`` is what activates every ``constrain(...)`` inside
+        the model / megasteps (they no-op without an active mesh), so
+        all entry points that can trigger a jit call enter it."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
     def step(self) -> List[GenerationResult]:
         """Admit what fits, run one decode burst (or a mixed
         prefill+decode megastep), evict what finished.
 
         Returns results for requests that completed during this step.
         """
+        with self._sharding_ctx():
+            return self._step_impl()
+
+    def _step_impl(self) -> List[GenerationResult]:
         if self.paged:
             return self._step_paged()
         self._admit()
@@ -1210,13 +1262,37 @@ class ServeEngine:
             self.n_joins += 1
         return slot
 
+    def _paged_cache_shardings(self):
+        """NamedSharding pytree for the paged pool (mesh mode only):
+        block/slot axes replicated, feature dims on "model"."""
+        from jax.sharding import NamedSharding
+        from ..models.sharding import paged_cache_specs
+        kw = {"num_state_slots": self.num_state_slots} \
+            if self.state_store is not None else {}
+        struct = jax.eval_shape(
+            lambda: self.model.init_paged_cache(
+                self.allocator.num_blocks, self.block_size,
+                dtype=self.cache_dtype, **kw))
+        axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        specs = paged_cache_specs(struct, axis_sizes=axis_sizes)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
     def _ensure_paged_cache(self) -> None:
         if self._paged_cache is None:
             kw = {"num_state_slots": self.num_state_slots} \
                 if self.state_store is not None else {}
-            self._paged_cache = self.model.init_paged_cache(
+            shardings = None
+            if self.mesh is not None:
+                shardings = self._paged_cache_shardings()
+                sig = inspect.signature(self.model.init_paged_cache)
+                if "shardings" in sig.parameters:
+                    kw["shardings"], shardings = shardings, None
+            cache = self.model.init_paged_cache(
                 self.allocator.num_blocks, self.block_size,
                 dtype=self.cache_dtype, **kw)
+            if shardings is not None:   # model without creation-time placement
+                cache = jax.device_put(cache, shardings)
+            self._paged_cache = cache
 
     # -- preemption ---------------------------------------------------------
     def preempt(self, rid: int) -> bool:
@@ -1228,7 +1304,8 @@ class ServeEngine:
             raise ValueError("preemption requires paged mode")
         for i, slot in enumerate(self._slots):
             if slot is not None and slot.rid == rid and not slot.done:
-                self._preempt_slot(i)
+                with self._sharding_ctx():
+                    self._preempt_slot(i)
                 return True
         return False
 

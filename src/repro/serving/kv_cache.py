@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import collections
 import hashlib
+import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, \
     Tuple
 
@@ -99,10 +100,22 @@ class DeviceSlotState:
     can pin the no-re-upload property.
     """
 
-    def __init__(self):
+    def __init__(self, put: Optional[Callable[[np.ndarray], "object"]] = None):
         self._dev: Optional[Dict[str, "object"]] = None
         self._dirty = True
         self.n_uploads = 0
+        # placement hook for rebuilds: host array -> device array.  The
+        # engine overrides it under a mesh so every slot array lands
+        # *replicated* (page tables / lengths / tokens are global control
+        # state — each device must see all of them).  Defaults to a plain
+        # single-device upload.
+        self.put = put
+
+    def _upload(self, v: np.ndarray):
+        if self.put is not None:
+            return self.put(v)
+        import jax.numpy as jnp
+        return jnp.asarray(v)
 
     @property
     def dirty(self) -> bool:
@@ -121,8 +134,7 @@ class DeviceSlotState:
     def device(self, build: Callable[[], Dict[str, np.ndarray]]):
         """Current device view; rebuilds from ``build()`` iff dirty."""
         if self._dirty or self._dev is None:
-            import jax.numpy as jnp
-            self._dev = {k: jnp.asarray(v) for k, v in build().items()}
+            self._dev = {k: self._upload(v) for k, v in build().items()}
             self._dirty = False
             self.n_uploads += 1
         return self._dev
@@ -225,20 +237,43 @@ class StateStore:
 
 
 class BlockAllocator:
-    """Refcounted free-list allocator with a full-block content table."""
+    """Refcounted free-list allocator with a full-block content table.
 
-    def __init__(self, num_blocks: int, block_size: int):
+    ``retain_cap`` bounds how many refcount-0 registered blocks stay
+    parked on the retained (prefix-reuse) list; beyond it the oldest are
+    retired to the plain free list and unregistered, so retention can
+    never crowd the content table with stale chains under churn.
+    ``retain_ttl_s`` optionally expires retained blocks by age (time
+    since their last reference dropped), swept at every allocator
+    mutation.  Neither affects ``n_free``: retained blocks were already
+    reusable — the cap/TTL only bound how long their *content* stays
+    addressable.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 retain_cap: Optional[int] = None,
+                 retain_ttl_s: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if num_blocks < 1:
             raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if retain_cap is not None and retain_cap < 0:
+            raise ValueError(f"retain_cap must be >= 0, got {retain_cap}")
+        if retain_ttl_s is not None and retain_ttl_s <= 0:
+            raise ValueError(f"retain_ttl_s must be > 0, got {retain_ttl_s}")
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
+        self.retain_cap = None if retain_cap is None else int(retain_cap)
+        self.retain_ttl_s = retain_ttl_s
+        self._clock = clock if clock is not None else time.monotonic
+        self.n_retain_evictions = 0
         # FIFO reuse keeps physical placement deterministic for tests
         self._free: collections.deque = collections.deque(range(num_blocks))
         # retained: registered blocks at refcount 0, LRU order (dicts
-        # preserve insertion order; oldest entry is recycled first)
-        self._retained: Dict[int, None] = {}
+        # preserve insertion order; oldest entry is recycled first),
+        # valued by the time their last reference dropped (TTL sweeps)
+        self._retained: Dict[int, float] = {}
         self._ref: Dict[int, int] = {}
         # content table: parent digest -> {page tokens -> block id}, plus
         # the reverse index used to unregister a block when it is recycled
@@ -310,6 +345,7 @@ class BlockAllocator:
         content table only at that moment."""
         if n < 0:
             raise ValueError(f"cannot acquire {n} blocks")
+        self._sweep_ttl()
         if n > self.n_free:
             raise CacheFullError(
                 f"need {n} blocks, only {self.n_free}/{self.num_blocks} free")
@@ -354,11 +390,38 @@ class BlockAllocator:
             if r == 1:
                 del self._ref[b]
                 if b in self._key_of:
-                    self._retained[b] = None
+                    self._retained[b] = self._clock()
+                    self._trim_retained()
                 else:
                     self._free.append(b)
             else:
                 self._ref[b] = r - 1
+        self._sweep_ttl()
+
+    def _retire_oldest_retained(self) -> None:
+        """Move the oldest retained block to the plain free list and
+        drop its content-table entry (it is no longer addressable)."""
+        b = next(iter(self._retained))
+        del self._retained[b]
+        self._unregister(b)
+        self._free.append(b)
+        self.n_retain_evictions += 1
+
+    def _trim_retained(self) -> None:
+        if self.retain_cap is None:
+            return
+        while len(self._retained) > self.retain_cap:
+            self._retire_oldest_retained()
+
+    def _sweep_ttl(self) -> None:
+        if self.retain_ttl_s is None or not self._retained:
+            return
+        now = self._clock()
+        while self._retained:
+            b = next(iter(self._retained))     # oldest retire time first
+            if now - self._retained[b] < self.retain_ttl_s:
+                break
+            self._retire_oldest_retained()
 
     # -- content addressing -------------------------------------------------
     def register(self, block: int, parent: bytes,

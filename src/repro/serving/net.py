@@ -91,7 +91,12 @@ class TensorQueryClient:
     # -- submission ---------------------------------------------------------
     def submit(self, prompt, lane: str = "interactive",
                deadline: Optional[float] = None) -> int:
-        """Send one prompt; returns its query id without blocking."""
+        """Send one prompt; returns its query id without blocking.
+        Raises ``ConnectionError`` if the connection is closed or the
+        socket is dead (instead of surfacing an opaque OS error)."""
+        if self._closed:
+            raise ConnectionError(
+                "tensor_query client is closed — cannot submit new queries")
         arr = np.asarray(prompt, np.int32).reshape(-1)
         with self._lock:
             qid = self._next_qid
@@ -100,15 +105,26 @@ class TensorQueryClient:
         frame = pack_frame(MSG_REQUEST, qid, pack_tensor(arr),
                            lane=LANE_CODES[lane],
                            deadline=0.0 if deadline is None else float(deadline))
-        with self._send_lock:
-            self.sock.sendall(frame)
+        try:
+            with self._send_lock:
+                self.sock.sendall(frame)
+        except OSError as exc:
+            with self._lock:
+                self._requests.pop(qid, None)   # never submitted
+            raise ConnectionError(
+                f"tensor_query connection is closed or broken, cannot "
+                f"submit query {qid}: {exc}") from exc
         return qid
 
     def result(self, qid: int,
                timeout: Optional[float] = 60.0) -> QueryResult:
-        """Block until ``qid``'s DONE/ERROR frame arrives."""
+        """Block until ``qid``'s DONE/ERROR frame arrives.  Raises
+        ``ValueError`` for a qid this connection never submitted."""
         with self._lock:
-            res = self._requests[qid]
+            res = self._requests.get(qid)
+        if res is None:
+            raise ValueError(
+                f"unknown query id {qid}: not submitted on this connection")
         if not res.done.wait(timeout=timeout):
             raise TimeoutError(f"query {qid} not finished in {timeout}s")
         return res
@@ -192,7 +208,7 @@ class TensorQueryServer:
                                          on_submit=self._register,
                                          timeout_s=filter_timeout_s))
         unbatch = E.TensorUnbatcher("unbatch")
-        self.sink = E.TensorQueryServerSink("qsink")
+        self.sink = E.TensorQueryServerSink("qsink", on_done=self._unroute)
         self.pipeline = (Pipeline("tensor-query-server")
                          .add(self.src, batcher, q, filt, unbatch, self.sink)
                          .link("qsrc", "batch", "dispatch", "llm",
@@ -205,14 +221,27 @@ class TensorQueryServer:
             with self._routes_lock:
                 self._routes[rid] = (q["conn"], int(q["qid"]))
 
+    def _unroute(self, meta) -> None:
+        """Drop a request's route once its terminal frame was sent (or
+        its connection died) — routes must never outlive the request."""
+        rid = meta.get("rid") if isinstance(meta, dict) else None
+        if rid is not None:
+            with self._routes_lock:
+                self._routes.pop(int(rid), None)
+
     def _on_tokens(self, rid: int, new_tokens) -> None:
         with self._routes_lock:
             route = self._routes.get(rid)
         if route is None:
             return
         conn, qid = route
+        # enqueue-only (the connection's writer thread does the socket
+        # I/O) so a stalled client cannot block the engine's drain path
         conn.send_frame(MSG_TOKENS, qid,
                         pack_tensor(np.asarray(new_tokens, np.int32)))
+        if not conn.alive:
+            with self._routes_lock:
+                self._routes.pop(rid, None)
 
     # -- lifecycle ----------------------------------------------------------
     @property

@@ -39,6 +39,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..models.sharding import constrain
+
+
+def _replicated_logits(logits):
+    """Under a mesh, gather the (B, V) logits replicated before the
+    sampler: the model's head leaves them vocab-sharded on the model
+    axis, and sampling on a full replica keeps every device's slot
+    state bitwise in lockstep (it is also how production TP samplers
+    work — the allgather is tiny next to a model step).  No-op without
+    a mesh context."""
+    return constrain(logits, None, None)
+
 
 def make_prefill_step(model, capacity: int, cache_dtype=jnp.bfloat16):
     def prefill_step(params, tokens, extra_embeds=None):
@@ -152,6 +164,7 @@ def make_paged_mixed_step(model, sampler, *, eos_id, max_new, capacity):
         logits, cache = model.paged_step(
             params, cache, tokens, st["page_table"], st["lengths"], t_valid,
             st["state_slots"])
+        logits = _replicated_logits(logits)
         nxt = sampler(logits, st["rids"], st["steps"])
         st = _advance(st, nxt, emit, t_valid, eos=eos, max_new=max_new,
                       capacity=capacity)
@@ -216,6 +229,7 @@ def make_paged_burst(model, sampler, *, eos_id, max_new, capacity,
             logits, cache = model.paged_step(
                 params, cache, st["tokens"][:, None], st["page_table"],
                 st["lengths"], t_valid, st["state_slots"])
+            logits = _replicated_logits(logits)
             nxt = sampler(logits, st["rids"], st["steps"])
             st = _advance(st, nxt, emit, t_valid, eos=eos, max_new=max_new,
                           capacity=capacity)
@@ -242,6 +256,7 @@ def make_dense_burst(model, sampler, *, eos_id, max_new,
         def body_step(st, cache, i, emit):
             logits, cache = model.decode_step(params, cache,
                                               st["tokens"][:, None], pos + i)
+            logits = _replicated_logits(logits)
             nxt = sampler(logits, st["rids"], st["steps"])
             st = _advance(st, nxt, emit, emit.astype(jnp.int32),
                           eos=eos, max_new=max_new)

@@ -178,6 +178,87 @@ def test_allocator_blocks_for():
     assert a.blocks_for(9) == 2
 
 
+def _retain_n(a, n, start=0):
+    """Acquire, register and release ``n`` blocks with distinct content
+    so each lands on the retained list (oldest first)."""
+    from repro.serving import ROOT_DIGEST
+    blocks = a.acquire(n)
+    for i, b in enumerate(blocks):
+        a.register(b, ROOT_DIGEST,
+                   tuple(range(start + i * a.block_size,
+                               start + (i + 1) * a.block_size)))
+        a.release([b])
+    return blocks
+
+
+def test_allocator_retain_cap_evicts_oldest():
+    from repro.serving import ROOT_DIGEST
+    a = BlockAllocator(num_blocks=8, block_size=2, retain_cap=2)
+    blocks = _retain_n(a, 4)
+    # only the 2 newest chains stay addressable; the oldest were retired
+    # to the plain free list and unregistered
+    assert a.n_retained == 2 and a.retained_blocks() == set(blocks[2:])
+    assert a.n_retain_evictions == 2
+    assert a.lookup(ROOT_DIGEST, (0, 1)) is None
+    assert a.lookup(ROOT_DIGEST, (4, 5)) == blocks[2]
+    # retention never costs capacity: every block is still allocatable
+    assert a.n_free == a.num_blocks
+    got = a.acquire(8)
+    assert len(got) == 8 and a.n_table == 0
+
+
+def test_allocator_retain_cap_zero_disables_retention():
+    from repro.serving import ROOT_DIGEST
+    a = BlockAllocator(num_blocks=4, block_size=2, retain_cap=0)
+    _retain_n(a, 2)
+    assert a.n_retained == 0 and a.n_table == 0
+    assert a.lookup(ROOT_DIGEST, (0, 1)) is None
+    assert a.n_free == 4
+
+
+def test_allocator_retain_cap_spares_resurrected_blocks():
+    a = BlockAllocator(num_blocks=8, block_size=2, retain_cap=1)
+    (b0, b1) = _retain_n(a, 2)         # b0 retired by the cap, b1 retained
+    a.share([b1])                      # resurrect: live again, not retained
+    assert a.ref(b1) == 1 and a.n_retained == 0
+    _retain_n(a, 1, start=100)         # a new retained block fits the cap
+    assert a.n_retained == 1 and a.ref(b1) == 1
+    a.release([b1])
+
+
+def test_allocator_retain_ttl_expires_by_age():
+    from repro.serving import ROOT_DIGEST
+    now = [0.0]
+    a = BlockAllocator(num_blocks=8, block_size=2, retain_ttl_s=10.0,
+                       clock=lambda: now[0])
+    (b0,) = _retain_n(a, 1)
+    now[0] = 5.0
+    (b1,) = _retain_n(a, 1, start=100)
+    assert a.n_retained == 2
+    now[0] = 11.0                      # b0 is 11s old, b1 only 6s
+    a.acquire(0)                       # any allocator mutation sweeps
+    assert a.retained_blocks() == {b1}
+    assert a.lookup(ROOT_DIGEST, (0, 1)) is None
+    assert a.lookup(ROOT_DIGEST, (100, 101)) == b1
+    now[0] = 16.0
+    a.acquire(0)
+    assert a.n_retained == 0 and a.n_table == 0
+    assert a.n_free == a.num_blocks
+
+
+def test_allocator_retention_unbounded_by_default():
+    a = BlockAllocator(num_blocks=6, block_size=2)
+    _retain_n(a, 6)
+    assert a.n_retained == 6 and a.n_retain_evictions == 0
+
+
+def test_allocator_retain_param_guards():
+    with pytest.raises(ValueError, match="retain_cap"):
+        BlockAllocator(num_blocks=4, block_size=2, retain_cap=-1)
+    with pytest.raises(ValueError, match="retain_ttl_s"):
+        BlockAllocator(num_blocks=4, block_size=2, retain_ttl_s=0.0)
+
+
 def _run_alloc_sequence(ops):
     """Shared property body for acquire/share/register/release
     interleavings.  ``ops`` is a list of (kind, x) with kind in 0..3:

@@ -1,0 +1,215 @@
+"""Tensor-parallel paged serving conformance — the sharded matrix.
+
+A ServeEngine handed a ``(1, N)`` serving mesh shards the model weights
+by the training PartitionSpec rules and the paged KV pool's feature
+dims over the "model" axis, while every piece of host-mirrored control
+state (page tables, lengths, slot tokens) stays replicated.  The
+contract under test: sharded decode is **token-identical** to the
+single-device engine — greedy and seeded sampling, through mid-decode
+joins, prefix-shared COW forks, and preemption spill/restore — because
+tensor parallelism only changes *where* each matmul shard runs, never
+what the sampler sees (logits are gathered replicated before every
+draw).
+
+Bit-identical logits across *different* mesh sizes are explicitly not
+the bar (sharded reductions reorder float sums); token identity is, and
+within one mesh shape preempted vs. undisturbed runs must still match
+bitwise.
+
+Needs >= 2 devices.  On CPU simulate them with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_mesh_serving.py
+"""
+import jax
+import numpy as np
+import pytest
+
+if jax.device_count() < 2:
+    pytest.skip(
+        "needs >= 2 devices "
+        "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+        allow_module_level=True)
+
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import ServeEngine
+
+from test_kv_paged import TINY
+
+
+def _serve_all(model, params, prompts, *, mesh=None, temperature=0.0,
+               top_k=None, seed=0, trace=False, preempt_rid=None,
+               after_tokens=2):
+    """Serve ``prompts``; the tail of the list is submitted two ticks
+    in (so late requests join slots that are already mid-decode),
+    optionally preempting one request mid-decode."""
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=8, block_size=4, prefill_chunk=4,
+                      temperature=temperature, top_k=top_k, seed=seed,
+                      trace_logits=trace, mesh=mesh)
+    assert eng.paged
+    for p in prompts[:2]:
+        eng.submit(p, lane="batch")
+    late, ticks = list(prompts[2:]), 0
+    pending = preempt_rid is not None
+    results = []
+    while eng.has_work or late:
+        ticks += 1
+        if ticks == 3:
+            for p in late:
+                eng.submit(p, lane="batch")
+            late = []
+        if pending:
+            for s in eng._slots:
+                if s is None or s.rid != preempt_rid:
+                    continue
+                if (s.prefill_off >= len(s.prompt)
+                        and len(s.tokens) >= after_tokens):
+                    assert eng.preempt(preempt_rid)
+                    pending = False
+                break
+        results += eng.step()
+    assert not pending, "never caught the slot mid-decode"
+    return eng, {r.request_id: r for r in results}
+
+
+def _prompts(seed, n=5, vocab=TINY.vocab_size):
+    # spread lengths across prefill-chunk boundaries so slots finish at
+    # different ticks (that's what makes mid-decode joins happen)
+    rng = np.random.default_rng(seed)
+    lengths = [4, 12, 6, 11, 8][:n]
+    return [rng.integers(1, vocab, k).astype(np.int32) for k in lengths]
+
+
+def _assert_same_results(ref, got, label):
+    assert set(ref) == set(got)
+    for rid in ref:
+        assert got[rid].status == ref[rid].status == "ok", (label, rid)
+        assert list(got[rid].tokens) == list(ref[rid].tokens), \
+            f"{label}: rid {rid} tokens diverged"
+
+
+# -- token identity: the four-family matrix ------------------------------
+
+def test_mesh2_token_identical_greedy(family_model):
+    family, model, params = family_model
+    prompts = _prompts(23)
+    _, ref = _serve_all(model, params, prompts)
+    eng, got = _serve_all(model, params, prompts,
+                          mesh=make_serving_mesh(model=2))
+    _assert_same_results(ref, got, f"{family} mesh=2 greedy")
+    assert eng.n_joins > 0          # identity held through mid-decode joins
+
+
+def test_mesh2_token_identical_sampled(family_model):
+    """Sampler keys fold (seed, request, step) — placement-independent,
+    so seeded sampling matches across mesh sizes too."""
+    family, model, params = family_model
+    prompts = _prompts(29)
+    kw = dict(temperature=0.8, top_k=8, seed=3)
+    _, ref = _serve_all(model, params, prompts, **kw)
+    _, got = _serve_all(model, params, prompts,
+                        mesh=make_serving_mesh(model=2), **kw)
+    _assert_same_results(ref, got, f"{family} mesh=2 sampled")
+
+
+def test_mesh_sweep_transformer():
+    """Every mesh size the host can simulate decodes the same tokens."""
+    from repro.models import build_model
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(31)
+    _, ref = _serve_all(model, params, prompts)
+    for n in (2, 4, 8):
+        if n > jax.device_count():
+            continue
+        _, got = _serve_all(model, params, prompts,
+                            mesh=make_serving_mesh(model=n))
+        _assert_same_results(ref, got, f"mesh={n}")
+
+
+# -- sharded engine behaviors --------------------------------------------
+
+def test_mesh_prefix_share_cow_identity():
+    """Prefix sharing + COW forks run unchanged over the mesh: block
+    bookkeeping is host-side and replicated, only the pool payload is
+    sharded."""
+    from repro.models import build_model
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(37)
+    shared = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate(
+                   [shared,
+                    rng.integers(1, TINY.vocab_size, 3 + i).astype(np.int32)])
+               for i in range(4)]
+    _, ref = _serve_all(model, params, prompts)
+    eng, got = _serve_all(model, params, prompts,
+                          mesh=make_serving_mesh(model=2))
+    _assert_same_results(ref, got, "mesh=2 prefix-shared")
+    assert eng.n_prefix_hits > 0 and eng.n_shared_tokens > 0
+
+
+def test_mesh_preempt_restore(family_model):
+    """Spill/restore round-trips sharded pages through host memory and
+    back; the restored request must match the undisturbed sharded run
+    bitwise (same mesh => same reduction order) and the single-device
+    run token-wise."""
+    family, model, params = family_model
+    prompts = _prompts(41, n=2)
+    mesh = make_serving_mesh(model=2)
+    _, base = _serve_all(model, params, prompts)
+    ref_eng, ref = _serve_all(model, params, prompts, mesh=mesh, trace=True)
+    pre_eng, pre = _serve_all(model, params, prompts, mesh=mesh, trace=True,
+                              preempt_rid=0)
+    assert pre_eng.n_preemptions == 1 and pre_eng.n_restores == 1
+    _assert_same_results(ref, pre, f"{family} mesh preempt")
+    _assert_same_results(base, pre, f"{family} mesh-vs-single preempt")
+    for rid, trace in ref_eng.logit_trace.items():
+        other = pre_eng.logit_trace[rid]
+        assert len(trace) == len(other), (family, rid)
+        for step, (x, y) in enumerate(zip(trace, other)):
+            assert np.array_equal(x, y), \
+                f"{family}: rid {rid} logits diverged at step {step}"
+
+
+def test_mesh_params_and_pool_actually_sharded():
+    """The mesh engine must not silently replicate everything: at least
+    one weight leaf and one paged-pool leaf are split over "model"."""
+    from repro.models import build_model
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    eng, _ = _serve_all(model, params, _prompts(43, n=2),
+                        mesh=make_serving_mesh(model=2))
+    p_sharded = [l for l in jax.tree.leaves(eng.params)
+                 if not l.sharding.is_fully_replicated]
+    assert p_sharded, "no parameter leaf is sharded over the mesh"
+    c_sharded = [l for l in jax.tree.leaves(eng._paged_cache)
+                 if not l.sharding.is_fully_replicated]
+    assert c_sharded, "no paged-pool leaf is sharded over the mesh"
+
+
+def test_mesh_steady_state_upload_parity():
+    """Sharding must not degrade the device-resident decode loop: the
+    mesh engine re-uploads slot state exactly as often as the
+    single-device engine (structural changes only, never per tick)."""
+    from repro.models import build_model
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(47)
+    ref_eng, _ = _serve_all(model, params, prompts)
+    mesh_eng, _ = _serve_all(model, params, prompts,
+                             mesh=make_serving_mesh(model=2))
+    ref_ls, mesh_ls = ref_eng.loop_stats(), mesh_eng.loop_stats()
+    assert mesh_ls["n_state_uploads"] == ref_ls["n_state_uploads"]
+    assert mesh_ls["n_device_steps"] == ref_ls["n_device_steps"]
+
+
+def test_mesh_requires_paged_mode():
+    from repro.models import build_model
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, batch_size=2, capacity=32,
+                    max_new_tokens=4, paged=False,
+                    mesh=make_serving_mesh(model=2))

@@ -4,12 +4,15 @@ Uses the deterministic ToyModel from test_serve_continuous so expected
 token sequences are known in closed form and no jit compilation beyond
 the toy cache ops is required.
 """
+import threading
+import time
+
 import numpy as np
 import pytest
 
-from repro.core.elements.query import (MSG_ERROR, MSG_REQUEST, STATUS_CODES,
-                                       pack_frame, pack_tensor, read_frame,
-                                       unpack_tensor)
+from repro.core.elements.query import (MSG_ERROR, MSG_REQUEST, MSG_TOKENS,
+                                       STATUS_CODES, pack_frame, pack_tensor,
+                                       read_frame, unpack_tensor)
 from repro.serving import ServeEngine, TensorQueryClient, TensorQueryServer
 
 from test_serve_continuous import ToyModel, _expected
@@ -71,6 +74,137 @@ def test_oversized_prompt_rejected_with_error_frame(server):
     assert cli.result(ok, timeout=60).status == "ok"
     cli.close()
     assert srv.src.n_rejected == 1
+
+
+class _WedgedSock:
+    """Socket proxy whose writes block until ``gate`` opens — a client
+    that stopped reading, seen from the server's side of the wire."""
+
+    def __init__(self, sock, gate):
+        self._sock, self._gate = sock, gate
+
+    def sendall(self, data):
+        self._gate.wait(timeout=30.0)
+        return self._sock.sendall(data)
+
+    def __getattr__(self, name):
+        return getattr(self._sock, name)
+
+
+def _wait_until(cond, timeout=10.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(0.01)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+def test_routes_empty_after_drained_workload(server):
+    """Regression: routes were added at submit but never removed, so the
+    server's route table grew one entry per request forever."""
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    prompts = [np.asarray([i + 1, i + 2], np.int32) for i in range(7)]
+    qids = [cli.submit(p) for p in prompts]
+    for p, q in zip(prompts, qids):
+        assert cli.result(q, timeout=60).status == "ok"
+    # the sink unroutes right after handing DONE to the connection;
+    # the client can observe its frame a hair earlier, so poll briefly
+    _wait_until(lambda: not srv._routes, what="_routes to drain")
+    cli.close()
+
+
+def test_slow_client_does_not_stall_other_requests(server):
+    """A client whose socket never makes progress must not block the
+    engine's token streaming (and with it every other request): sends
+    ride a bounded per-connection queue drained by a writer thread."""
+    eng, srv = server
+    slow = TensorQueryClient("127.0.0.1", srv.port)
+    _wait_until(lambda: len(srv.src.connections) == 1,
+                what="slow connection to be accepted")
+    sconn = srv.src.connections[0]       # slow client's server-side conn
+    fast = TensorQueryClient("127.0.0.1", srv.port)
+    _wait_until(lambda: len(srv.src.connections) == 2,
+                what="fast connection to be accepted")
+    # simulate a wedged peer: every socket write on the slow client's
+    # server-side connection blocks until the gate opens
+    gate = threading.Event()
+    sconn.sock = _WedgedSock(sconn.sock, gate)
+    try:
+        sq = slow.submit(np.asarray([1, 2, 3], np.int32))
+        t0 = time.monotonic()
+        fq = [fast.submit(np.asarray([i + 1, i + 2], np.int32))
+              for i in range(4)]
+        for q in fq:
+            r = fast.result(q, timeout=30)
+            assert r.status == "ok"
+        fast_latency = time.monotonic() - t0
+        # the fast client drained a full workload while the slow one's
+        # writer thread was wedged mid-send
+        assert fast_latency < 20.0
+    finally:
+        gate.set()
+    r = slow.result(sq, timeout=30)
+    assert r.status == "ok"
+    assert list(r.tokens) == _expected(np.asarray([1, 2, 3], np.int32), 6)
+    slow.close()
+    fast.close()
+
+
+def test_tokens_dropped_on_outbound_overflow_done_authoritative(server):
+    """With the outbound queue artificially tiny and the socket wedged,
+    best-effort TOKENS deltas are dropped, terminal DONE frames still
+    queue, and the authoritative sequence survives."""
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    _wait_until(lambda: len(srv.src.connections) == 1,
+                what="connection to be accepted")
+    gate = threading.Event()
+    sconn = srv.src.connections[0]
+    sconn.sock = _WedgedSock(sconn.sock, gate)
+    sconn.max_outbound = 1
+    prompt = np.asarray([1, 2, 3], np.int32)
+    try:
+        qid = cli.submit(prompt)
+        _wait_until(lambda: sconn.n_dropped > 0,
+                    what="TOKENS deltas to be dropped on overflow")
+    finally:
+        gate.set()
+    r = cli.result(qid, timeout=30)
+    assert r.status == "ok"
+    assert list(r.tokens) == _expected(prompt, 6)   # DONE is authoritative
+    assert len(r.stream) < len(r.tokens)            # some deltas were lost
+    cli.close()
+
+
+def test_client_unknown_qid_raises_value_error(server):
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    with pytest.raises(ValueError, match="unknown query id 42"):
+        cli.result(42, timeout=1.0)
+    cli.close()
+
+
+def test_client_submit_after_close_raises_connection_error(server):
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    cli.close()
+    with pytest.raises(ConnectionError, match="closed"):
+        cli.submit(np.asarray([1, 2], np.int32))
+
+
+def test_client_submit_on_dead_socket_raises_connection_error(server):
+    """A broken (but not close()d) socket should also surface as a clear
+    ConnectionError, and the failed qid must not linger as pending."""
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    cli.sock.close()                     # dead transport, client not closed
+    with pytest.raises(ConnectionError, match="closed or broken"):
+        cli.submit(np.asarray([1, 2], np.int32))
+    assert cli._requests == {}           # the failed submit left no orphan
+    cli._closed = True                   # silence the reader, then tear down
+    cli.close()
 
 
 def test_wire_format_roundtrip():

@@ -11,7 +11,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.models.sharding import cache_specs, param_specs
+from repro.models.sharding import cache_specs, paged_cache_specs, param_specs
 
 
 def _leaves_with_paths(tree):
@@ -86,6 +86,64 @@ def test_cache_specs_batched_decode_shards_batch():
     specs = cache_specs(cache, dp=("data",), shard_seq_when_batch1=False)
     k_spec = specs["blocks"]["s0"]["k"]
     assert k_spec[1] == "data"
+
+
+def _paged_struct(family):
+    from conftest import FAMILY_CFGS
+    model = build_model(FAMILY_CFGS[family])
+    return jax.eval_shape(
+        lambda: model.init_paged_cache(8, 4, num_state_slots=4))
+
+
+@pytest.mark.parametrize("family",
+                         ["transformer", "mamba", "xlstm", "hybrid"])
+def test_paged_cache_specs_pool_axis_replicated(family):
+    """The serving pool's block/slot axis must never shard: pages are
+    addressed by host-side tables, so every device needs every block
+    resident.  TP lives on feature dims only."""
+    cache = _paged_struct(family)
+    shape_leaves = _leaves_with_paths(cache)
+    for path, spec in _leaves_with_paths(
+            paged_cache_specs(cache)).items():
+        assert len(spec) <= shape_leaves[path].ndim, path
+        lead = 1 if path.startswith("blocks") or "blocks/" in path else 0
+        if shape_leaves[path].ndim > lead:
+            assert spec[lead] is None, \
+                f"{family}:{path} shards the block/slot axis"
+
+
+def test_paged_cache_specs_kv_sharded_on_head_dim():
+    cache = _paged_struct("transformer")
+    leaves = _leaves_with_paths(paged_cache_specs(cache))
+    k = next(v for p, v in leaves.items() if p.endswith("/k"))
+    assert k[-1] == "model"  # (nb, bs, KV, hd): head_dim on TP axis
+
+
+def test_paged_cache_specs_divisibility_filter():
+    # TINY_SERVE head_dim is 8: a 16-way model axis can't divide it, so
+    # the filter must drop the axis rather than emit an invalid layout
+    cache = _paged_struct("transformer")
+    leaves = _leaves_with_paths(
+        paged_cache_specs(cache, axis_sizes={"model": 16}))
+    k = next(v for p, v in leaves.items() if p.endswith("/k"))
+    assert all(a is None for a in k)
+
+
+def test_paged_cache_structs_and_shardings_helper():
+    """The launch-layer helper mirrors the pool struct one-to-one with
+    NamedShardings (works on any device count — (1,1) mesh here)."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.specs import paged_cache_structs_and_shardings
+    from conftest import FAMILY_CFGS
+    model = build_model(FAMILY_CFGS["hybrid"])
+    mesh = make_serving_mesh(model=1)
+    struct, shardings = paged_cache_structs_and_shardings(
+        model, mesh, num_blocks=8, block_size=4, num_state_slots=4)
+    assert (jax.tree_util.tree_structure(struct)
+            == jax.tree_util.tree_structure(shardings))
+    from jax.sharding import NamedSharding
+    assert all(isinstance(s, NamedSharding)
+               for s in jax.tree_util.tree_leaves(shardings))
 
 
 DRYRUN_SMOKE = r"""
