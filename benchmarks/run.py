@@ -18,7 +18,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: e1,e2,e3,e4,e5,e6,e7,e8,roofline")
+                    help="comma list: e1,e2,e3,e4,e5,e6,e7,e8,e9,roofline")
     ap.add_argument("--json", default=None,
                     help="write rows as machine-readable JSON here "
                          "(default: BENCH_serving.json on full runs; "
@@ -31,11 +31,13 @@ def main() -> None:
         else ("" if only else "BENCH_serving.json")
 
     from . import (e1_multimodel, e2_ars, e3_mtcnn, e4_overhead, e5_batching,
-                   e6_decode_loop, e7_frontdoor, e8_sharded, roofline)
+                   e6_decode_loop, e7_frontdoor, e8_sharded, e9_speculative,
+                   roofline)
     sections = [("e1", e1_multimodel), ("e2", e2_ars), ("e3", e3_mtcnn),
                 ("e4", e4_overhead), ("e5", e5_batching),
                 ("e6", e6_decode_loop), ("e7", e7_frontdoor),
-                ("e8", e8_sharded), ("roofline", roofline)]
+                ("e8", e8_sharded), ("e9", e9_speculative),
+                ("roofline", roofline)]
     print("name,us_per_call,derived")
     failed = False
     report = {"sections": {}, "rows": []}

@@ -47,6 +47,17 @@ FAMILY_CONFIGS = {
 }
 
 
+def _print_spec_stats(engine):
+    ls = engine.loop_stats()
+    if "n_spec_rounds" not in ls:
+        return
+    rounds = max(1, ls["n_spec_rounds"])
+    print(f"speculative: K={ls['spec_k']}, {ls['n_spec_rounds']} rounds -> "
+          f"{ls['n_spec_tokens']} tokens "
+          f"({ls['n_spec_tokens'] / rounds:.2f}/round), accept rate "
+          f"{ls['spec_accept_rate']:.2f}, hist {ls['spec_accept_hist']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-360m")
@@ -120,6 +131,16 @@ def main():
     ap.add_argument("--retain-ttl-s", type=float, default=None,
                     help="paged mode: retire retained blocks older than "
                          "this many seconds (default: no TTL)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed and "
+                         "verified per burst round (0 = off; paged "
+                         "transformer-family targets only — recurrent "
+                         "state cannot roll back rejected tokens)")
+    ap.add_argument("--draft-config", default=None, metavar="ARCH",
+                    help="--spec-k: the draft model — an --arch id sharing "
+                         "the target's vocabulary, or 'tiny' for an "
+                         "auto-shrunken copy of the target config (the "
+                         "default when --spec-k > 0)")
     ap.add_argument("--burst", type=int, default=8,
                     help="decode burst length K: fused device steps per "
                          "host round-trip when no admissions/prefills are "
@@ -136,6 +157,28 @@ def main():
         cfg = cfg.replace(param_dtype="float32", compute_dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    draft_model = draft_params = None
+    if args.spec_k > 0:
+        name = args.draft_config or "tiny"
+        if name == "tiny":
+            # shrunken copy of the target: half the layers and width,
+            # same head_dim and (crucially) the same vocabulary
+            dcfg = cfg.replace(
+                arch_id=f"{cfg.arch_id}-draft",
+                n_layers=max(1, cfg.n_layers // 2),
+                d_model=max(2 * cfg.n_heads, cfg.d_model // 2),
+                n_heads=max(1, cfg.n_heads // 2),
+                n_kv_heads=max(1, min(cfg.n_kv_heads, cfg.n_heads // 2)),
+                d_ff=max(4, cfg.d_ff // 2) if cfg.d_ff else cfg.d_ff)
+        else:
+            dcfg = get_config(name, smoke=args.smoke)
+        if args.smoke:
+            dcfg = dcfg.replace(param_dtype="float32",
+                                compute_dtype="float32")
+        draft_model = build_model(dcfg)
+        draft_params = draft_model.init(jax.random.PRNGKey(1))
+        print(f"speculative decoding: K={args.spec_k}, draft "
+              f"{dcfg.arch_id} ({dcfg.n_layers}L d{dcfg.d_model})")
     tri = {"auto": None, "on": True, "off": False}
     mesh = None
     if args.mesh is not None:
@@ -156,7 +199,9 @@ def main():
                          temperature=args.temperature,
                          top_k=args.top_k, seed=args.seed,
                          mesh=mesh, retain_cap=args.retain_cap,
-                         retain_ttl_s=args.retain_ttl_s)
+                         retain_ttl_s=args.retain_ttl_s,
+                         draft_model=draft_model, draft_params=draft_params,
+                         spec_k=args.spec_k)
 
     if args.requests < 1:
         raise SystemExit("--requests must be >= 1")
@@ -202,6 +247,7 @@ def main():
                   f"joins={engine.n_joins} evictions={engine.n_evictions} "
                   f"preemptions={engine.n_preemptions} "
                   f"restores={engine.n_restores} expired={engine.n_expired}")
+            _print_spec_stats(engine)
             client.close()
         except KeyboardInterrupt:
             pass
@@ -251,6 +297,7 @@ def main():
           f"({ls['n_host_syncs'] / decoded:.2f}/step), "
           f"{ls['n_state_uploads']} state uploads, "
           f"{ls['n_burst_early_exits']} early exits")
+    _print_spec_stats(engine)
     if engine.paged:
         a = engine.allocator
         s = engine.pool_stats()

@@ -623,6 +623,15 @@ class TransformerLM:
         mid-sequence, so any recurrent layer disables prefix sharing."""
         return self.supports_paged() and not self.has_recurrent_state()
 
+    def supports_speculative(self) -> bool:
+        """Speculative (draft-verify) decoding rolls rejected tokens
+        back by arithmetic on the per-slot ``lengths`` vector — KV pages
+        past the new length are simply never attended again.  Recurrent
+        state has no such cheap rollback: a slab advanced through
+        rejected tokens is irreversibly polluted, so any recurrent layer
+        disables speculative mode (mirrors ``supports_prefix_sharing``)."""
+        return self.supports_paged() and not self.has_recurrent_state()
+
     def init_paged_cache(self, num_blocks: int, block_size: int,
                          dtype=jnp.bfloat16, num_state_slots: int = 0,
                          shardings=None):
@@ -743,7 +752,7 @@ class TransformerLM:
         return out
 
     def paged_step(self, params, cache, tokens, page_table, lengths, t_valid,
-                   state_slots=None):
+                   state_slots=None, *, all_logits: bool = False):
         """Advance each slot by up to T tokens through the paged cache.
 
         tokens: (B,T) int32; page_table: (B,P) int32; lengths: (B,)
@@ -754,7 +763,10 @@ class TransformerLM:
         engine passes its ``StateStore`` assignment).  Covers decode
         (T=1) and chunked prefill (T=chunk) uniformly; slots may mix
         phases.  Returns (logits (B,V) at each slot's last valid token,
-        cache).
+        cache) — or (logits (B,T,V) at *every* position, cache) under
+        ``all_logits`` (the speculative verify step scores all drafted
+        positions from one call; rows past ``t_valid`` are garbage and
+        must be masked by the caller).
         """
         if state_slots is None:
             state_slots = jnp.arange(tokens.shape[0], dtype=jnp.int32)
@@ -790,6 +802,8 @@ class TransformerLM:
             x, blocks = jax.lax.scan(body, x, (params["blocks"],
                                                cache["blocks"]))
         new_cache["blocks"] = blocks
+        if all_logits:
+            return self._head(params, x), new_cache
         if tokens.shape[1] == 1:
             # megastep fast path: decode bursts are T=1, the only valid
             # token is position 0 — skip the gather (bitwise identical)

@@ -1,18 +1,23 @@
 from .engine import ServeEngine, GenerationResult
 from .kv_cache import (BlockAllocator, CacheFullError, DeviceSlotState,
-                       ROOT_DIGEST, StateStore, chain_digest, paged_gather,
-                       paged_scatter)
+                       ROOT_DIGEST, SPEC_STATE_KEYS, StateStore, chain_digest,
+                       paged_gather, paged_scatter)
 from .net import TensorQueryClient, TensorQueryServer
 from .scheduler import LANES, SchedRequest, Scheduler
-from .steps import (make_prefill_step, make_decode_step, make_dense_burst,
-                    make_paged_burst, make_paged_mixed_step,
-                    make_sampler_core, make_slot_sampler, sample_logits)
+from .steps import (logits_to_probs, make_prefill_step, make_decode_step,
+                    make_dense_burst, make_paged_burst, make_paged_mixed_step,
+                    make_paged_spec_burst, make_paged_spec_mixed_step,
+                    make_sampler_core, make_slot_sampler, sample_logits,
+                    spec_accept)
 
 __all__ = ["ServeEngine", "GenerationResult", "BlockAllocator",
-           "CacheFullError", "DeviceSlotState", "ROOT_DIGEST", "StateStore",
+           "CacheFullError", "DeviceSlotState", "ROOT_DIGEST",
+           "SPEC_STATE_KEYS", "StateStore",
            "chain_digest", "paged_gather", "paged_scatter",
            "LANES", "SchedRequest", "Scheduler",
            "TensorQueryClient", "TensorQueryServer",
-           "make_prefill_step", "make_decode_step", "make_dense_burst",
-           "make_paged_burst", "make_paged_mixed_step", "make_sampler_core",
-           "make_slot_sampler", "sample_logits"]
+           "logits_to_probs", "make_prefill_step", "make_decode_step",
+           "make_dense_burst", "make_paged_burst", "make_paged_mixed_step",
+           "make_paged_spec_burst", "make_paged_spec_mixed_step",
+           "make_sampler_core", "make_slot_sampler", "sample_logits",
+           "spec_accept"]

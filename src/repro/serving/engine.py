@@ -108,7 +108,8 @@ from .kv_cache import (ROOT_DIGEST, BlockAllocator, CacheFullError,
                        DeviceSlotState, StateStore, chain_digest)
 from .scheduler import SchedRequest, Scheduler
 from .steps import (make_decode_step, make_dense_burst, make_paged_burst,
-                    make_paged_mixed_step, make_prefill_step,
+                    make_paged_mixed_step, make_paged_spec_burst,
+                    make_paged_spec_mixed_step, make_prefill_step,
                     make_sampler_core)
 
 
@@ -149,7 +150,8 @@ class _PagedSlot:
     in the engine's ``_lengths`` array; this tracks ownership."""
     __slots__ = ("rid", "prompt", "tokens", "t_submit", "done", "blocks",
                  "reserve_left", "prefill_off", "digests", "lane",
-                 "deadline", "tag", "status", "t_first", "adm_seq")
+                 "deadline", "tag", "status", "t_first", "adm_seq",
+                 "spec_rounds", "spec_deficit", "spec_prev")
 
     def __init__(self, req: SchedRequest, blocks: List[int],
                  reserve_left: int, prefill_off: int = 0,
@@ -169,6 +171,13 @@ class _PagedSlot:
         self.status = "ok"
         self.t_first: Optional[float] = None
         self.adm_seq = 0
+        # host mirrors of the speculative slot-state keys (spec engines
+        # only): rounds run (PRNG stream position), draft-cache deficit
+        # (0/1 positions the draft KV trails the target), and the token
+        # at cache position lengths-1 (the deficit catch-up input)
+        self.spec_rounds = 0
+        self.spec_deficit = 0
+        self.spec_prev = 0
 
 
 class ServeEngine:
@@ -183,7 +192,8 @@ class ServeEngine:
                  num_state_slots: Optional[int] = None,
                  burst: int = 1, trace_logits: bool = False,
                  mesh=None, retain_cap: Optional[int] = None,
-                 retain_ttl_s: Optional[float] = None):
+                 retain_ttl_s: Optional[float] = None,
+                 draft_model=None, draft_params=None, spec_k: int = 0):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -299,6 +309,69 @@ class ServeEngine:
                 "it.  Run with share_prefix=False (or leave it on auto).")
         self.share_prefix = (self.paged and sharable) if share_prefix is None \
             else bool(share_prefix)
+        # speculative (draft-verify) decoding: a small draft model runs
+        # spec_k tokens ahead inside each decode burst round, the target
+        # verifies every drafted position in ONE T = spec_k+1 paged
+        # step, and accept/reject follows the rejection-sampling rule
+        # (see steps.make_paged_spec_burst) — the output distribution is
+        # provably the target's, and greedy output is token-identical to
+        # non-speculative decode by construction.
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = int(spec_k)
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self._spec = self.spec_k > 0
+        if self._spec:
+            if draft_model is None or draft_params is None:
+                raise ValueError(
+                    "spec_k > 0 requires draft_model= and draft_params= "
+                    "(a small model sharing the target's vocabulary)")
+            if not self.paged:
+                raise ValueError(
+                    "spec_k > 0 requires paged mode: speculative rollback "
+                    "is arithmetic on per-slot lengths, which only the "
+                    "block-paged cache tracks")
+            if mesh is not None:
+                raise NotImplementedError(
+                    "speculative decoding under mesh= is not implemented "
+                    "yet: the draft pool needs its own sharding specs and "
+                    "the accept rule a replicated gather per drafted "
+                    "position")
+            if prefill_chunk < 2:
+                raise ValueError(
+                    "spec_k > 0 requires prefill_chunk >= 2: the draft's "
+                    "deficit catch-up feeds two tokens through the mixed "
+                    f"megastep, got prefill_chunk={prefill_chunk}")
+            for role, m in (("target", model), ("draft", draft_model)):
+                sup = getattr(m, "supports_speculative", None)
+                ok = sup() if sup is not None else not bool(
+                    getattr(m, "has_recurrent_state", lambda: False)())
+                if not ok:
+                    raise ValueError(
+                        f"spec_k > 0 but the {role} model "
+                        f"{type(m).__name__} (family="
+                        f"{getattr(getattr(m, 'cfg', None), 'family', '?')!r}) "
+                        "has recurrent layers: rejected tokens roll back by "
+                        "arithmetic on per-slot lengths, and a recurrent "
+                        "state slab advanced through rejected tokens cannot "
+                        "be rolled back.  Serve this family with spec_k=0.")
+            tcfg = getattr(model, "cfg", None)
+            dcfg = getattr(draft_model, "cfg", None)
+            if tcfg is not None and dcfg is not None \
+                    and tcfg.vocab_size != dcfg.vocab_size:
+                raise ValueError(
+                    f"draft/target vocab mismatch: target {tcfg.vocab_size} "
+                    f"vs draft {dcfg.vocab_size} — speculative decoding "
+                    "requires a shared tokenizer/vocabulary")
+            if share_prefix:
+                raise ValueError(
+                    "share_prefix=True is incompatible with spec_k > 0: the "
+                    "draft KV rides the same page tables as the target, but "
+                    "COW forks and content registration only cover the "
+                    "target pool.  Leave share_prefix on auto (speculative "
+                    "mode disables it) or set it False.")
+            self.share_prefix = False
         self._pages_per_slot = -(-capacity // block_size)
         if num_blocks is None:
             num_blocks = batch_size * self._pages_per_slot
@@ -337,7 +410,19 @@ class ServeEngine:
                 self._gather_pages = jax.jit(_generic_gather_pages)
                 self._scatter_pages = jax.jit(_generic_scatter_pages,
                                               donate_argnums=(0,))
+        # the draft pool spills/restores beside the target pool with its
+        # own (draft-shaped) gather/scatter
+        self._gather_draft = self._scatter_draft = None
+        if self._spec:
+            g = getattr(draft_model, "gather_paged_pages", None)
+            s = getattr(draft_model, "scatter_paged_pages", None)
+            self._gather_draft = jax.jit(g) if g is not None \
+                else jax.jit(_generic_gather_pages)
+            self._scatter_draft = jax.jit(s, donate_argnums=(0,)) \
+                if s is not None \
+                else jax.jit(_generic_scatter_pages, donate_argnums=(0,))
         self._paged_cache = None
+        self._draft_cache = None
         # optional per-request logit recording (conformance tests)
         self.trace_logits = trace_logits
         self.logit_trace: Dict[int, List[np.ndarray]] = {}
@@ -345,7 +430,24 @@ class ServeEngine:
         # one jit, cache AND slot state donated — the pool is rewritten
         # every tick, and without donation XLA copies all
         # num_blocks*block_size K/V per token
-        if self.paged:
+        if self.paged and self._spec:
+            self._mixed_fn = jax.jit(
+                make_paged_spec_mixed_step(model, draft_model, sampler,
+                                           eos_id=eos_id,
+                                           max_new=max_new_tokens,
+                                           capacity=capacity),
+                donate_argnums=(2, 3, 4))
+            self._burst_fn = jax.jit(
+                make_paged_spec_burst(model, draft_model, eos_id=eos_id,
+                                      max_new=max_new_tokens,
+                                      capacity=capacity,
+                                      spec_k=self.spec_k,
+                                      k_static=self.max_burst, seed=seed,
+                                      greedy=self._greedy,
+                                      temperature=temperature or 1.0,
+                                      top_k=top_k, trace=trace_logits),
+                donate_argnums=(2, 3, 4))
+        elif self.paged:
             self._mixed_fn = jax.jit(
                 make_paged_mixed_step(model, sampler, eos_id=eos_id,
                                       max_new=max_new_tokens,
@@ -391,6 +493,14 @@ class ServeEngine:
         self.n_device_steps = 0       # fused megasteps executed on device
         self.n_host_syncs = 0         # decode-loop device->host drains
         self.n_burst_early_exits = 0  # bursts cut short by all-done
+        # speculative-decode counters (see loop_stats())
+        self.n_spec_rounds = 0        # draft+verify rounds executed
+        self.n_spec_tokens = 0        # tokens emitted by those rounds
+        self.n_draft_proposed = 0     # draft tokens offered to the verifier
+        self.n_draft_accepted = 0     # draft tokens the verifier accepted
+        # per-round accepted-length histogram: bin a counts rounds that
+        # accepted exactly a draft tokens (a in [0, spec_k])
+        self.spec_accept_hist = [0] * (self.spec_k + 1) if self._spec else []
 
     # -- synchronous fixed batch API (kept for benchmarks/back-compat) ------
     def generate_batch(self, prompts: np.ndarray,
@@ -494,12 +604,23 @@ class ServeEngine:
         host-syncs-per-token figure the burst mode drives toward 1/K;
         ``n_state_uploads`` counts host->device slot-state rebuilds
         (structural events only — steady decode adds none)."""
-        return {"burst": self.burst, "max_burst": self.max_burst,
-                "n_bursts": self.n_bursts,
-                "n_device_steps": self.n_device_steps,
-                "n_host_syncs": self.n_host_syncs,
-                "n_burst_early_exits": self.n_burst_early_exits,
-                "n_state_uploads": self._dev.n_uploads}
+        out = {"burst": self.burst, "max_burst": self.max_burst,
+               "n_bursts": self.n_bursts,
+               "n_device_steps": self.n_device_steps,
+               "n_host_syncs": self.n_host_syncs,
+               "n_burst_early_exits": self.n_burst_early_exits,
+               "n_state_uploads": self._dev.n_uploads}
+        if self._spec:
+            out.update(
+                spec_k=self.spec_k,
+                n_spec_rounds=self.n_spec_rounds,
+                n_spec_tokens=self.n_spec_tokens,
+                n_draft_proposed=self.n_draft_proposed,
+                n_draft_accepted=self.n_draft_accepted,
+                spec_accept_hist=list(self.spec_accept_hist),
+                spec_accept_rate=self.n_draft_accepted
+                / max(1, self.n_draft_proposed))
+        return out
 
     def compile_stats(self) -> Dict[str, int]:
         """Compilation counts of the jitted hot-path functions.  The
@@ -740,9 +861,22 @@ class ServeEngine:
             active[i] = (not s.done and s.prefill_off >= len(s.prompt)
                          and len(s.tokens) > 0
                          and int(self._lengths[i]) < self.capacity)
-        return {"tokens": tokens, "rids": rids, "steps": steps,
-                "active": active, "page_table": self._page_table,
-                "lengths": self._lengths, "state_slots": self._state_slots}
+        out = {"tokens": tokens, "rids": rids, "steps": steps,
+               "active": active, "page_table": self._page_table,
+               "lengths": self._lengths, "state_slots": self._state_slots}
+        if self._spec:
+            rounds = np.zeros((B,), np.int32)
+            deficit = np.zeros((B,), np.int32)
+            prev = np.zeros((B,), np.int32)
+            for i, s in enumerate(self._slots):
+                if s is None:
+                    continue
+                rounds[i] = s.spec_rounds
+                deficit[i] = s.spec_deficit
+                prev[i] = s.spec_prev
+            out.update(spec_rounds=rounds, spec_deficit=deficit,
+                       spec_prev=prev)
+        return out
 
     def _drain_burst(self, tok_buf, val_buf, logit_buf, *, k: int,
                      paged: bool) -> None:
@@ -781,6 +915,73 @@ class ServeEngine:
                     slot.done = True
         if not paged:
             self._pos += n_steps
+        now = time.monotonic()
+        for i, new_toks in fresh.items():
+            slot = self._slots[i]
+            if slot.t_first is None:
+                slot.t_first = now
+            if self.stream_cb is not None:
+                self.stream_cb(slot.rid, new_toks)
+
+    def _drain_spec_burst(self, tok_buf, val_buf, logit_buf, *,
+                          k: int) -> None:
+        """Speculative-burst drain: the rings are ``(k, B, spec_k+1)``
+        — round ``r`` emitted slot ``b``'s tokens at the valid
+        positions, always a contiguous prefix (accepted drafts, then
+        one replacement/bonus token, truncated at eos).  Replays the
+        in-jit done rule per token and the spec-field update
+        (``spec_rounds``/``spec_deficit``/``spec_prev``) per round so
+        the host mirror can rebuild device state after any structural
+        event, and accumulates the acceptance statistics."""
+        bufs = (tok_buf, val_buf) if logit_buf is None \
+            else (tok_buf, val_buf, logit_buf)
+        got = jax.device_get(bufs)
+        self.n_host_syncs += 1
+        toks, valid = got[0], got[1]
+        logits = got[2] if logit_buf is not None else None
+        n_rounds = int(valid.any(axis=(1, 2)).sum())
+        self.n_bursts += 1
+        self.n_device_steps += n_rounds
+        if n_rounds < k:
+            self.n_burst_early_exits += 1
+        fresh: Dict[int, List[int]] = {}
+        for r in range(n_rounds):
+            for i, slot in enumerate(self._slots):
+                if slot is None or not valid[r, i].any():
+                    continue
+                # per-round draft budget, recomputed from the
+                # *pre-round* host mirrors (same formula as in-jit)
+                gb = max(0, min(self.max_new_tokens - len(slot.tokens) - 1,
+                                self.capacity - int(self._lengths[i]) - 1,
+                                self.spec_k))
+                m = int(valid[r, i].sum())
+                for j in range(m):
+                    if logits is not None:
+                        self.logit_trace.setdefault(slot.rid, []).append(
+                            logits[r, i, j].copy())
+                    slot.tokens.append(int(toks[r, i, j]))
+                    fresh.setdefault(i, []).append(slot.tokens[-1])
+                    self._lengths[i] += 1
+                    if ((self.eos_id is not None
+                         and slot.tokens[-1] == self.eos_id)
+                            or len(slot.tokens) >= self.max_new_tokens
+                            or int(self._lengths[i]) >= self.capacity):
+                        slot.done = True
+                slot.spec_rounds += 1
+                slot.spec_deficit = 1 if m == gb + 1 else 0
+                slot.spec_prev = self._seq_tokens(
+                    slot, int(self._lengths[i]) - 1,
+                    int(self._lengths[i]))[0]
+                self.n_spec_rounds += 1
+                self.n_spec_tokens += m
+                self.n_draft_proposed += gb
+                # the round's last emitted token is the replacement /
+                # bonus draw, everything before it an accepted draft
+                # (a round cut short by an eos *inside* the drafted
+                # prefix under-counts by one; the slot finishes then,
+                # so the drift is at most 1 per request)
+                self.n_draft_accepted += m - 1
+                self.spec_accept_hist[min(m - 1, self.spec_k)] += 1
         now = time.monotonic()
         for i, new_toks in fresh.items():
             slot = self._slots[i]
@@ -913,12 +1114,7 @@ class ServeEngine:
         busy = [(i, s) for i, s in enumerate(self._slots) if s is not None]
         if not busy:
             return finished
-        if self._paged_cache is None:
-            kw = {"num_state_slots": self.num_state_slots} \
-                if self.state_store is not None else {}
-            self._paged_cache = self.model.init_paged_cache(
-                self.allocator.num_blocks, self.block_size,
-                dtype=self.cache_dtype, **kw)
+        self._ensure_paged_cache()
         if any(s.prefill_off < len(s.prompt) for _, s in busy):
             self._step_paged_mixed(busy)
         else:
@@ -958,9 +1154,16 @@ class ServeEngine:
                 self._extend_blocks(i, slot,
                                     int(self._lengths[i]) + int(t_valid[i]))
         st = self._dev.device(self._paged_state)
-        cache, st, sampled, logits = self._mixed_fn(
-            self.params, self._paged_cache, st, jnp.asarray(tokens),
-            jnp.asarray(t_valid), jnp.asarray(emit))
+        if self._spec:
+            cache, dcache, st, sampled, logits = self._mixed_fn(
+                self.params, self.draft_params, self._paged_cache,
+                self._draft_cache, st, jnp.asarray(tokens),
+                jnp.asarray(t_valid), jnp.asarray(emit))
+            self._draft_cache = dcache
+        else:
+            cache, st, sampled, logits = self._mixed_fn(
+                self.params, self._paged_cache, st, jnp.asarray(tokens),
+                jnp.asarray(t_valid), jnp.asarray(emit))
         self._paged_cache = cache
         self._dev.adopt(st)
         self.n_prefill_chunks += 1
@@ -975,6 +1178,12 @@ class ServeEngine:
                 continue
             was_prefilling = slot.prefill_off < len(slot.prompt)
             self._lengths[i] += t_valid[i]
+            if self._spec:
+                # replay of the in-jit spec-field update: consuming any
+                # chunk catches the draft cache up (deficit 0) and the
+                # chunk's last token sits at position lengths-1
+                slot.spec_deficit = 0
+                slot.spec_prev = int(tokens[i, int(t_valid[i]) - 1])
             if was_prefilling:
                 slot.prefill_off += int(t_valid[i])
                 if slot.prefill_off < len(slot.prompt):
@@ -1015,9 +1224,15 @@ class ServeEngine:
             if L >= self.capacity:
                 slot.done = True      # cache strip exhausted: truncate
                 continue
-            # the burst writes at most k tokens, stops at max_new
-            # (final length = prompt + max_new - 1) and at capacity
-            target = min(L + k, len(slot.prompt) + self.max_new_tokens - 1,
+            # a plain burst writes at most k tokens; a speculative one
+            # writes up to spec_k+1 positions per round (even rejected
+            # drafts are written, then rolled back by arithmetic).
+            # Both stop at max_new (final length = prompt + max_new - 1,
+            # and the per-round draft budget keeps every *write* under
+            # that too) and at capacity.
+            span = (self.spec_k + 1) if self._spec else 1
+            target = min(L + k * span,
+                         len(slot.prompt) + self.max_new_tokens - 1,
                          self.capacity)
             if target > L:
                 self._cow_write_range(i, slot, L, target - L)
@@ -1026,6 +1241,16 @@ class ServeEngine:
         if not any_active:
             return
         st = self._dev.device(self._paged_state)
+        if self._spec:
+            out = self._burst_fn(self.params, self.draft_params,
+                                 self._paged_cache, self._draft_cache, st,
+                                 np.int32(k))
+            self._paged_cache, self._draft_cache = out[0], out[1]
+            self._dev.adopt(out[2])
+            self._drain_spec_burst(out[3], out[4],
+                                   out[5] if self.trace_logits else None,
+                                   k=k)
+            return
         out = self._burst_fn(self.params, self._paged_cache, st, np.int32(k))
         self._paged_cache = out[0]
         self._dev.adopt(out[1])
@@ -1246,13 +1471,22 @@ class ServeEngine:
         _, slot_i, req, blocks, reserve, slab = join
         self._ensure_paged_cache()
         if req.spill is not None:
+            spill = req.spill["target"] if self._spec else req.spill
             self._paged_cache = self._scatter_pages(
-                self._paged_cache, req.spill,
+                self._paged_cache, spill,
                 jnp.asarray(blocks, jnp.int32), jnp.int32(slab))
+            if self._spec:
+                self._draft_cache = self._scatter_draft(
+                    self._draft_cache, req.spill["draft"],
+                    jnp.asarray(blocks, jnp.int32), jnp.int32(0))
         slot = _PagedSlot(req, blocks, reserve,
                           prefill_off=len(req.prompt),
                           digests=list(req.digests))
         slot.tokens = list(req.tokens)
+        if self._spec and req.spec is not None:
+            slot.spec_rounds = int(req.spec["rounds"])
+            slot.spec_deficit = int(req.spec["deficit"])
+            slot.spec_prev = int(req.spec["prev"])
         self._page_table[slot_i, :] = 0
         self._page_table[slot_i, :len(blocks)] = blocks
         self._lengths[slot_i] = req.length
@@ -1293,6 +1527,12 @@ class ServeEngine:
             if shardings is not None:   # model without creation-time placement
                 cache = jax.device_put(cache, shardings)
             self._paged_cache = cache
+        if self._spec and self._draft_cache is None:
+            # the draft pool shadows the target pool one-to-one: same
+            # block count / block size / page tables, draft-model dims
+            self._draft_cache = self.draft_model.init_paged_cache(
+                self.allocator.num_blocks, self.block_size,
+                dtype=self.cache_dtype)
 
     # -- preemption ---------------------------------------------------------
     def preempt(self, rid: int) -> bool:
@@ -1347,7 +1587,21 @@ class ServeEngine:
                 self._paged_cache,
                 jnp.asarray(slot.blocks[:n_pages], jnp.int32),
                 jnp.int32(self._state_slots[slot_i]))
-            req.spill = jax.device_get(payload)
+            if self._spec:
+                # spill the draft pool's view of the same pages, plus
+                # the spec mirrors, so restore resumes the identical
+                # draft state and PRNG stream
+                dpayload = self._gather_draft(
+                    self._draft_cache,
+                    jnp.asarray(slot.blocks[:n_pages], jnp.int32),
+                    jnp.int32(0))
+                req.spill = {"target": jax.device_get(payload),
+                             "draft": jax.device_get(dpayload)}
+                req.spec = {"rounds": slot.spec_rounds,
+                            "deficit": slot.spec_deficit,
+                            "prev": slot.spec_prev}
+            else:
+                req.spill = jax.device_get(payload)
             req.length = L
             req.tokens = list(slot.tokens)
             req.digests = list(slot.digests)

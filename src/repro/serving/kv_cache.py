@@ -57,8 +57,8 @@ import numpy as np
 from ..models.attention import paged_gather, paged_scatter  # noqa: F401
 
 __all__ = ["BlockAllocator", "CacheFullError", "DeviceSlotState",
-           "ROOT_DIGEST", "StateStore", "chain_digest", "paged_gather",
-           "paged_scatter"]
+           "ROOT_DIGEST", "SPEC_STATE_KEYS", "StateStore", "chain_digest",
+           "paged_gather", "paged_scatter"]
 
 # Chain root: the digest "before" a sequence's first page.
 ROOT_DIGEST = hashlib.sha256(b"repro.kv_cache.root").digest()
@@ -74,6 +74,19 @@ def chain_digest(parent: bytes, tokens: Sequence[int]) -> bytes:
 class CacheFullError(RuntimeError):
     """Raised by ``BlockAllocator.acquire`` when the pool cannot satisfy
     the request.  The allocator state is unchanged (all-or-nothing)."""
+
+
+# Slot-state keys that exist only when speculative decoding is enabled
+# (see ``steps.make_paged_spec_burst``).  They ride the same
+# ``DeviceSlotState`` coherence protocol as the core keys: rebuilt from
+# the host mirror on structural events, mutated in-jit otherwise.  The
+# draft model's KV cache itself needs *no* extra bookkeeping here — it
+# is a second cache pytree indexed by the **same** page tables, lengths
+# and block allocator as the target cache (one logical position maps to
+# one physical block id in both pools), so admission reservation,
+# extension, COW-free sharing gates and eviction all apply to the pair
+# atomically.
+SPEC_STATE_KEYS = ("spec_rounds", "spec_deficit", "spec_prev")
 
 
 class DeviceSlotState:
@@ -98,6 +111,11 @@ class DeviceSlotState:
     ``jnp.asarray(page_table/lengths/...)`` re-upload the per-step host
     loop paid.  ``n_uploads`` counts rebuilds so benchmarks and tests
     can pin the no-re-upload property.
+
+    Speculative serving adds the ``SPEC_STATE_KEYS`` entries
+    (``spec_rounds`` / ``spec_deficit`` / ``spec_prev``) to the same
+    dict: they follow the identical dirty/adopt/rebuild protocol, so
+    draft-cache coherence costs no extra uploads.
     """
 
     def __init__(self, put: Optional[Callable[[np.ndarray], "object"]] = None):

@@ -83,7 +83,9 @@ class TensorQueryClient:
         self._lock = threading.Lock()
         self._next_qid = 0
         self._requests: Dict[int, QueryResult] = {}
-        self._closed = False
+        self._collected: set = set()    # qids result() already returned
+        self._closed = False            # close() was called
+        self._broken = False            # reader thread exited: socket dead
         self._reader = threading.Thread(target=self._read_loop,
                                         name="tq-client-reader", daemon=True)
         self._reader.start()
@@ -94,9 +96,12 @@ class TensorQueryClient:
         """Send one prompt; returns its query id without blocking.
         Raises ``ConnectionError`` if the connection is closed or the
         socket is dead (instead of surfacing an opaque OS error)."""
-        if self._closed:
+        if self._closed or self._broken:
             raise ConnectionError(
-                "tensor_query client is closed — cannot submit new queries")
+                "tensor_query client is closed — cannot submit new queries"
+                if self._closed else
+                "tensor_query connection is dead (reader thread exited) — "
+                "cannot submit new queries")
         arr = np.asarray(prompt, np.int32).reshape(-1)
         with self._lock:
             qid = self._next_qid
@@ -119,14 +124,30 @@ class TensorQueryClient:
     def result(self, qid: int,
                timeout: Optional[float] = 60.0) -> QueryResult:
         """Block until ``qid``'s DONE/ERROR frame arrives.  Raises
-        ``ValueError`` for a qid this connection never submitted."""
+        ``ValueError`` for a qid this connection never submitted.
+
+        Each ``QueryResult`` is returned exactly once: collecting it
+        drops the client's own reference (a long-lived connection would
+        otherwise retain every result's token arrays forever), leaving
+        a tombstone so a second collection attempt is a clear
+        ``ValueError`` rather than a silent unknown-qid one.  A timeout
+        does *not* collect — the query can still be retrieved once it
+        finishes."""
         with self._lock:
             res = self._requests.get(qid)
+            if res is None and qid in self._collected:
+                raise ValueError(
+                    f"query id {qid} already collected: result() returns "
+                    "each query exactly once — keep the returned "
+                    "QueryResult if you need it again")
         if res is None:
             raise ValueError(
                 f"unknown query id {qid}: not submitted on this connection")
         if not res.done.wait(timeout=timeout):
             raise TimeoutError(f"query {qid} not finished in {timeout}s")
+        with self._lock:
+            self._requests.pop(qid, None)
+            self._collected.add(qid)
         return res
 
     # -- reader -------------------------------------------------------------
@@ -155,16 +176,31 @@ class TensorQueryClient:
                     res.status = STATUS_NAMES.get(status, "error")
                     res.done.set()
                 elif msg_type == MSG_ERROR:
+                    # ERROR is as terminal as DONE: stamp both
+                    # timestamps so ttft_s/latency_s stay measurable
+                    # for failed queries (percentile aggregation must
+                    # count them, not silently drop them)
+                    if res.t_first is None:
+                        res.t_first = now
                     res.t_done = now
                     res.status = "error"
                     res.error = payload.decode("utf-8", "replace")
                     res.done.set()
         except (OSError, ConnectionError, ValueError):
             pass
-        # connection gone: fail everything still in flight
+        # The reader exiting — server EOF, socket error, or close() —
+        # means the connection is unusable: mark the client broken so
+        # submit() fails fast instead of sendall-ing into a half-dead
+        # socket, then fail everything still in flight with both
+        # timestamps stamped (connection death is a terminal path too).
+        self._broken = True
+        now = time.monotonic()
         with self._lock:
             pending = [r for r in self._requests.values() if not r.done.is_set()]
         for res in pending:
+            if res.t_first is None:
+                res.t_first = now
+            res.t_done = now
             res.status = "error"
             res.error = res.error or "connection closed"
             res.done.set()

@@ -66,6 +66,9 @@ class SchedRequest:
     length: int = 0                  # cache positions filled at spill time
     digests: List[bytes] = dataclasses.field(default_factory=list)
     spill: Any = None                # host pytree of page/slab data
+    # speculative-decode restore state: {"rounds", "deficit", "prev"}
+    # (None when the engine is not speculative or the request is fresh)
+    spec: Any = None
     # -- memoized prefix match (valid while allocator.epoch unchanged) --
     match: Optional[Tuple[List[int], List[bytes], int]] = None
     match_epoch: int = -1

@@ -206,6 +206,284 @@ def _run_burst(cache, st, k_max, k_static, trace_aval, body_step):
     return (out[2], out[1]) + out[3:]
 
 
+# ---------------------------------------------------------------------------
+# speculative (draft-verify) decoding
+# ---------------------------------------------------------------------------
+
+# Speculative draws fold a dedicated tag into the seed before the
+# request id, so the draft / accept / resample key streams can never
+# collide with the decode sampler's ``fold_in(fold_in(seed, rid), step)``
+# stream above.
+_SPEC_TAG = 0x5BEC
+_DRAFT_TAG, _ACCEPT_TAG, _RESAMPLE_TAG = 1, 2, 3
+
+
+def logits_to_probs(logits, *, temperature: float = 1.0,
+                    top_k: Optional[int] = None):
+    """``(..., V)`` logits -> the probability vector ``sample_logits``
+    draws from: same f32 cast, temperature divide, and top-k mask (ties
+    at the k-th value kept), then softmax.  ``temperature == 0``
+    degenerates to a one-hot at the argmax — the distribution greedy
+    decoding "samples" from — which is what lets the speculative accept
+    rule run greedy and seeded sampling through one code path."""
+    l = logits.astype(jnp.float32)
+    if temperature == 0:
+        return jax.nn.one_hot(jnp.argmax(l, axis=-1), l.shape[-1],
+                              dtype=jnp.float32)
+    l = l / jnp.float32(temperature)
+    if top_k is not None and 0 < top_k < l.shape[-1]:
+        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.nn.softmax(l, axis=-1)
+
+
+def spec_accept(draft_tokens, draft_probs, target_probs, budget, keys, *,
+                greedy: bool = False):
+    """Vectorised rejection-sampling accept rule (the standard
+    speculative-decoding rule, e.g. Leviathan et al. 2023).
+
+    ``draft_tokens (B, G) int32`` and ``draft_probs (B, G, V)`` are the
+    draft's proposals; ``target_probs (B, G+1, V)`` are the target's
+    distributions at every drafted position plus the bonus row;
+    ``budget (B,) int32`` in ``[0, G]`` caps how many proposals each row
+    may accept (rows beyond a row's budget hold garbage and are
+    ignored); ``keys (B, 2) uint32`` are per-row PRNG keys.
+
+    Draft token ``d_j`` is accepted iff ``u_j * q_j(d_j) < p_j(d_j)``
+    (``p`` target, ``q`` draft, ``u ~ U[0,1)``); the first rejected
+    position resamples from ``norm(max(p - q, 0))``, and full
+    acceptance draws the bonus token from the target's extra row
+    directly.  The emitted prefix is therefore distributed exactly as
+    ``p`` — and because greedy distributions are one-hots and ``u < 1``
+    strictly, the same arithmetic reduces to "accept iff the draft
+    matched the target argmax", making greedy speculative decode
+    token-identical to non-speculative greedy by construction.
+
+    Returns ``(emit (B, G+1) int32, n_acc (B,) int32)``: row ``b``'s
+    emitted continuation is ``emit[b, :n_acc[b] + 1]`` (accepted drafts
+    plus one replacement/bonus token); positions past that are garbage.
+    """
+    B, G = draft_tokens.shape
+    u = jax.vmap(lambda k: jax.random.uniform(
+        jax.random.fold_in(k, _ACCEPT_TAG), (G,)))(keys)
+    p_d = jnp.take_along_axis(target_probs[:, :G], draft_tokens[..., None],
+                              axis=-1)[..., 0]                  # (B, G)
+    q_d = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
+                              axis=-1)[..., 0]                  # (B, G)
+    ok = (u * q_d < p_d) & (jnp.arange(G)[None, :] < budget[:, None])
+    n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+
+    # Replacement row: target minus draft mass at the first rejection;
+    # on full acceptance (n_acc == budget) the draft proposed nothing at
+    # that position, so the draw is from the target row alone.
+    p_row = jnp.take_along_axis(target_probs, n_acc[:, None, None],
+                                axis=1)[:, 0]                   # (B, V)
+    q_pad = jnp.concatenate(
+        [draft_probs, jnp.zeros((B, 1) + draft_probs.shape[2:],
+                                draft_probs.dtype)], axis=1)
+    q_row = jnp.take_along_axis(q_pad, n_acc[:, None, None], axis=1)[:, 0]
+    q_row = jnp.where((n_acc < budget)[:, None], q_row, 0.0)
+    resid = jnp.maximum(p_row - q_row, 0.0)
+    # Float edge: if the residual mass cancels to exactly zero, fall
+    # back to the target row — still a valid sample of p.
+    resid = jnp.where(jnp.sum(resid, axis=-1, keepdims=True) > 0,
+                      resid, p_row)
+    if greedy:
+        repl = jnp.argmax(resid, axis=-1).astype(jnp.int32)
+    else:
+        rkeys = jax.vmap(lambda k: jax.random.fold_in(k, _RESAMPLE_TAG))(keys)
+        repl = jax.vmap(lambda k, r: jax.random.categorical(k, jnp.log(r)))(
+            rkeys, resid).astype(jnp.int32)
+
+    d_pad = jnp.concatenate([draft_tokens, jnp.zeros((B, 1), jnp.int32)],
+                            axis=1)
+    pos = jnp.arange(G + 1)[None, :]
+    emit = jnp.where(pos < n_acc[:, None], d_pad, repl[:, None])
+    return emit, n_acc
+
+
+def make_paged_spec_mixed_step(model, draft_model, sampler, *, eos_id,
+                               max_new, capacity):
+    """Spec-enabled variant of ``make_paged_mixed_step``: the target
+    step is unchanged (admission/prefill sampling stays bitwise
+    identical to non-speculative serving), but the draft model consumes
+    the *same* ``(tokens, t_valid)`` chunks so its KV cache tracks the
+    target's through prefill and single-step phases.  Rows carrying a
+    draft-cache deficit (see ``make_paged_spec_burst``) prepend
+    ``spec_prev`` to catch the draft up — which is why speculative mode
+    requires ``prefill_chunk >= 2``."""
+    eos = -1 if eos_id is None else int(eos_id)
+
+    def mixed_step(params, dparams, cache, dcache, st, tokens, t_valid,
+                   emit):
+        logits, cache = model.paged_step(
+            params, cache, tokens, st["page_table"], st["lengths"], t_valid,
+            st["state_slots"])
+        logits = _replicated_logits(logits)
+        nxt = sampler(logits, st["rids"], st["steps"])
+
+        deficit, prev = st["spec_deficit"], st["spec_prev"]
+        d_tokens = jnp.where(
+            (deficit > 0)[:, None],
+            jnp.concatenate([prev[:, None], tokens[:, :-1]], axis=1),
+            tokens)
+        tv_d = jnp.where(t_valid > 0, t_valid + deficit, 0)
+        _, dcache = draft_model.paged_step(
+            dparams, dcache, d_tokens, st["page_table"],
+            st["lengths"] - deficit, tv_d, None)
+
+        st = _advance(st, nxt, emit, t_valid, eos=eos, max_new=max_new,
+                      capacity=capacity)
+        prev_new = jnp.take_along_axis(
+            tokens, jnp.clip(t_valid - 1, 0, None)[:, None], axis=1)[:, 0]
+        st = dict(st,
+                  spec_deficit=jnp.where(t_valid > 0, 0, deficit),
+                  spec_prev=jnp.where(t_valid > 0, prev_new, prev))
+        return cache, dcache, st, nxt, logits
+    return mixed_step
+
+
+def make_paged_spec_burst(model, draft_model, *, eos_id, max_new, capacity,
+                          spec_k: int, k_static: int, seed: int,
+                          greedy: bool, temperature: float = 1.0,
+                          top_k: Optional[int] = None, trace: bool = False):
+    """Speculative decode burst: each of up to ``k_max`` rounds runs the
+    draft model ``spec_k`` tokens ahead (T=1 steps, plus a T=2 catch-up
+    step when the slot carries a draft-cache deficit), verifies all
+    drafted positions with **one** target ``paged_step(all_logits=True)``
+    of T = spec_k + 1, and folds the accepted prefix + one
+    replacement/bonus token into the slot state via ``spec_accept``.
+
+    Rollback is arithmetic: ``lengths`` advances by the emitted count
+    ``m`` only, so rejected positions — though written to the paged KV
+    — sit past the new length and are never attended again (the next
+    round's scatter rewrites them before any gather can see them).
+
+    Per-row draft budget ``gb = clip(min(max_new - steps - 1,
+    capacity - lengths - 1), 0, spec_k)`` keeps every write inside the
+    admission-time page reservation; a ``gb == 0`` row necessarily
+    finishes this round, so its draft steps are masked entirely.
+
+    Slot-state extras (beyond the contract at the top of this module):
+
+      ``spec_rounds (B,) int32``   rounds this request has run (PRNG)
+      ``spec_deficit (B,) int32``  target len minus draft-correct len (0/1)
+      ``spec_prev (B,) int32``     token at position ``lengths - 1``
+
+    Ring contract: ``tok_ring (k_static, B, spec_k+1)`` /
+    ``val_ring`` bools; round ``r`` slot ``b`` emitted
+    ``tok_ring[r, b, j]`` where ``val_ring[r, b, j]``.  With ``trace``,
+    ``trace_ring[r, b, j]`` is the target logits row that produced
+    emitted token ``j``."""
+    eos = -1 if eos_id is None else int(eos_id)
+    G = int(spec_k)
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), _SPEC_TAG)
+    probs = (lambda l: logits_to_probs(l, temperature=0.0)) if greedy else \
+        (lambda l: logits_to_probs(l, temperature=temperature, top_k=top_k))
+
+    def round_keys(rids, rounds):
+        fold = lambda r, n: jax.random.fold_in(jax.random.fold_in(base, r), n)
+        return jax.vmap(fold)(rids, rounds)
+
+    def burst(params, dparams, cache, dcache, st, k_max):
+        B = st["tokens"].shape[0]
+        trace_aval = jax.eval_shape(
+            model.paged_step, params, cache, jnp.zeros((B, G + 1), jnp.int32),
+            st["page_table"], st["lengths"], st["active"].astype(jnp.int32),
+            st["state_slots"], all_logits=True)[0] if trace else None
+
+        carry = (jnp.int32(0), st, cache, dcache,
+                 jnp.full((k_static, B, G + 1), -1, jnp.int32),
+                 jnp.zeros((k_static, B, G + 1), bool))
+        if trace_aval is not None:
+            carry += (jnp.zeros((k_static,) + trace_aval.shape,
+                                trace_aval.dtype),)
+
+        def cond(c):
+            return (c[0] < k_max) & jnp.any(c[1]["active"])
+
+        def body(c):
+            i, st, cache, dcache = c[0], c[1], c[2], c[3]
+            active = st["active"]
+            L, steps, x = st["lengths"], st["steps"], st["tokens"]
+            d, prev = st["spec_deficit"], st["spec_prev"]
+            gb = jnp.clip(jnp.minimum(max_new - steps - 1,
+                                      capacity - L - 1), 0, G)
+            gb = jnp.where(active, gb, 0)
+            keys = round_keys(st["rids"], st["spec_rounds"])
+
+            # --- draft G tokens ahead (step 0 is the T=2 catch-up) ---
+            tok0 = jnp.stack([jnp.where(d > 0, prev, x),
+                              jnp.where(d > 0, x, 0)], axis=1)
+            tv0 = jnp.where(active & (gb > 0), 1 + d, 0)
+            dlogits, dcache = draft_model.paged_step(
+                dparams, dcache, tok0, st["page_table"],
+                jnp.where(tv0 > 0, L - d, 0), tv0, None)
+            drafts, dprobs, cur = [], [], None
+            for j in range(G):
+                if j > 0:
+                    tv_j = (active & (j < gb)).astype(jnp.int32)
+                    dlogits, dcache = draft_model.paged_step(
+                        dparams, dcache, cur[:, None], st["page_table"],
+                        jnp.where(tv_j > 0, L + j, 0), tv_j, None)
+                p_j = probs(_replicated_logits(dlogits))
+                if greedy:
+                    cur = jnp.argmax(p_j, axis=-1).astype(jnp.int32)
+                else:
+                    kj = jax.vmap(lambda k: jax.random.fold_in(
+                        jax.random.fold_in(k, _DRAFT_TAG), j))(keys)
+                    cur = jax.vmap(
+                        lambda k, p: jax.random.categorical(k, jnp.log(p)))(
+                        kj, p_j).astype(jnp.int32)
+                drafts.append(cur)
+                dprobs.append(p_j)
+            D = jnp.stack(drafts, axis=1)                  # (B, G)
+            P = jnp.stack(dprobs, axis=1)                  # (B, G, V)
+
+            # --- verify every drafted position in one target step ---
+            tokens_v = jnp.concatenate([x[:, None], D], axis=1)
+            tv_v = jnp.where(active, gb + 1, 0)
+            qlogits, cache = model.paged_step(
+                params, cache, tokens_v, st["page_table"], L, tv_v,
+                st["state_slots"], all_logits=True)
+            qlogits = _replicated_logits(qlogits)
+            emit_full, n_acc = spec_accept(D, P, probs(qlogits), gb, keys,
+                                           greedy=greedy)
+
+            # --- fold accepted prefix + replacement into slot state ---
+            pos = jnp.arange(G + 1)[None, :]
+            is_eos = emit_full == eos
+            keep = (pos <= n_acc[:, None]) \
+                & (jnp.cumsum(is_eos, axis=1) - is_eos == 0) \
+                & active[:, None]
+            m = jnp.sum(keep.astype(jnp.int32), axis=1)
+            L2, steps2 = L + m, steps + m
+            take = lambda idx: jnp.take_along_axis(
+                emit_full, jnp.clip(idx, 0, None)[:, None], axis=1)[:, 0]
+            x2 = jnp.where(m > 0, take(m - 1), x)
+            done = jnp.any(is_eos & keep, axis=1) \
+                | (steps2 >= max_new) | (L2 >= capacity)
+            prev2 = jnp.where(m >= 2, take(m - 2),
+                              jnp.where(m > 0, x, prev))
+            st = dict(st, tokens=x2, steps=steps2, lengths=L2,
+                      active=active & ~done,
+                      spec_deficit=jnp.where(
+                          m > 0, (m == gb + 1).astype(jnp.int32), d),
+                      spec_prev=prev2,
+                      spec_rounds=st["spec_rounds"]
+                      + (m > 0).astype(jnp.int32))
+            out = (i + 1, st, cache, dcache,
+                   c[4].at[i].set(jnp.where(keep, emit_full, -1)),
+                   c[5].at[i].set(keep))
+            if trace_aval is not None:
+                out += (c[6].at[i].set(qlogits),)
+            return out
+
+        out = jax.lax.while_loop(cond, body, carry)
+        return (out[2], out[3], out[1]) + out[4:]
+    return burst
+
+
 def make_paged_burst(model, sampler, *, eos_id, max_new, capacity,
                      k_static: int, trace: bool = False):
     """Device-resident decode burst through the paged cache: up to

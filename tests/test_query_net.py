@@ -178,6 +178,69 @@ def test_tokens_dropped_on_outbound_overflow_done_authoritative(server):
     cli.close()
 
 
+def test_error_frame_stamps_ttft_and_latency(server):
+    """Regression: MSG_ERROR set ``t_done`` but never ``t_first``, so a
+    failed query reported ``latency_s`` with ``ttft_s`` forever None and
+    percentile aggregations silently dropped error rows.  ERROR is as
+    terminal as DONE: both timestamps must be stamped."""
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    r = cli.result(cli.submit(np.ones(17, np.int32)), timeout=10)
+    assert r.status == "error"
+    assert r.ttft_s is not None and r.latency_s is not None
+    assert 0 <= r.ttft_s <= r.latency_s
+    cli.close()
+
+
+def test_connection_death_stamps_pending_and_breaks_client(server):
+    """Regression: when the reader thread died, in-flight queries were
+    failed without timestamps (unmeasurable) and the client happily
+    accepted new submits into the dead socket.  Now every pending query
+    is stamped on both clocks and ``submit`` fails fast."""
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    _wait_until(lambda: len(srv.src.connections) == 1,
+                what="connection to be accepted")
+    gate = threading.Event()
+    sconn = srv.src.connections[0]
+    sconn.sock = _WedgedSock(sconn.sock, gate)   # no frame reaches the client
+    try:
+        qid = cli.submit(np.asarray([1, 2, 3], np.int32))
+        # a timeout does NOT collect: the query stays retrievable
+        with pytest.raises(TimeoutError):
+            cli.result(qid, timeout=0.1)
+        cli.sock.shutdown(__import__("socket").SHUT_RDWR)   # kill transport
+        r = cli.result(qid, timeout=10)
+    finally:
+        gate.set()
+    assert r.status == "error" and "connection closed" in r.error
+    assert r.ttft_s is not None and r.latency_s is not None
+    assert cli._broken
+    with pytest.raises(ConnectionError, match="dead"):
+        cli.submit(np.asarray([4, 5], np.int32))
+    cli.close()
+
+
+def test_result_collects_exactly_once_and_prunes(server):
+    """Regression: ``_requests`` retained every result forever — a
+    long-lived connection leaked one token array per query.  Collecting
+    drops the reference and leaves a tombstone so double collection is
+    a clear error, distinct from an unknown qid."""
+    eng, srv = server
+    cli = TensorQueryClient("127.0.0.1", srv.port)
+    prompts = [np.asarray([i + 1, i + 2], np.int32) for i in range(3)]
+    qids = [cli.submit(p) for p in prompts]
+    for p, q in zip(prompts, qids):
+        r = cli.result(q, timeout=60)
+        assert list(r.tokens) == _expected(p, 6)
+    assert cli._requests == {}                   # pruned, not retained
+    with pytest.raises(ValueError, match="already collected"):
+        cli.result(qids[0], timeout=1.0)
+    with pytest.raises(ValueError, match="unknown query id 99"):
+        cli.result(99, timeout=1.0)              # contract unchanged
+    cli.close()
+
+
 def test_client_unknown_qid_raises_value_error(server):
     eng, srv = server
     cli = TensorQueryClient("127.0.0.1", srv.port)

@@ -1,0 +1,345 @@
+"""Speculative draft-verify decode bursts — transformer conformance.
+
+A small draft model runs ``spec_k`` tokens ahead inside the paged
+decode burst; the target verifies every drafted position in one
+batched ``paged_step`` and the standard rejection-sampling accept rule
+keeps the output distribution *provably* that of the target alone.
+The checkable consequences, pinned here:
+
+  * greedy speculative decode is **token-identical** to non-speculative
+    greedy decode — including staggered joins, eos truncation, and
+    preemption spill/restore mid-speculation;
+  * a self-draft (draft == target) accepts every proposal;
+  * the accept rule itself preserves the target distribution
+    (seeded empirical check directly on ``spec_accept``), and so does
+    the end-to-end sampled engine;
+  * recurrent families (mamba / xlstm / hybrid) are rejected with a
+    descriptive error, as target *and* as draft — rejected tokens roll
+    back by length arithmetic, which recurrent state slabs cannot do.
+
+Test names carry the family (``transformer`` / ``mamba`` / ...) so the
+CI family-conformance matrix can select rows with ``-k``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import FAMILY_CFGS, RECURRENT_FAMILIES
+from repro.models import build_model
+from repro.serving import ServeEngine, spec_accept
+
+from test_kv_paged import TINY, _fresh_dense_tokens
+
+DRAFT = TINY.replace(arch_id="tiny-draft", n_layers=1, d_model=16,
+                     n_heads=2, n_kv_heads=1, d_ff=32)
+
+
+@pytest.fixture(scope="module")
+def target_mp():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def draft_mp():
+    model = build_model(DRAFT)
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+def _prompts(sizes=(5, 9, 3), seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+            for n in sizes]
+
+
+def _serve(model, params, prompts, *, draft=None, spec_k=0, max_new=10,
+           eos_id=None, temperature=0.0, top_k=None, seed=0, burst=4,
+           batch_size=4):
+    dm, dp = draft if draft is not None else (None, None)
+    eng = ServeEngine(model, params, batch_size=batch_size, capacity=64,
+                      max_new_tokens=max_new, block_size=4, prefill_chunk=8,
+                      burst=burst, eos_id=eos_id, temperature=temperature,
+                      top_k=top_k, seed=seed, draft_model=dm,
+                      draft_params=dp, spec_k=spec_k)
+    assert eng.paged
+    for p in prompts:
+        eng.submit(p, lane="batch")
+    results = []
+    while eng.has_work:
+        results += eng.step()
+    return eng, {r.request_id: r for r in results}
+
+
+# -- greedy token identity ----------------------------------------------------
+
+@pytest.mark.parametrize("spec_k", [2, 4])
+def test_transformer_spec_greedy_token_identical(target_mp, draft_mp, spec_k):
+    """Greedy spec == non-spec greedy == the dense oracle, per request."""
+    model, params = target_mp
+    prompts = _prompts()
+    _, ref = _serve(model, params, prompts)
+    eng, out = _serve(model, params, prompts, draft=draft_mp, spec_k=spec_k)
+    for rid, p in enumerate(prompts):
+        assert list(out[rid].tokens) == list(ref[rid].tokens), rid
+        assert list(out[rid].tokens) == \
+            _fresh_dense_tokens(model, params, p, 10), rid
+        assert out[rid].status == "ok"
+    ls = eng.loop_stats()
+    assert ls["n_spec_rounds"] > 0 and ls["n_draft_proposed"] > 0
+
+
+def test_transformer_spec_greedy_identity_with_joins(target_mp, draft_mp):
+    """Requests joining mid-burst (staggered admission, mixed prefill +
+    in-flight speculation) still produce oracle-identical streams."""
+    model, params = target_mp
+    dm, dp = draft_mp
+    prompts = _prompts((6, 9, 4), seed=5)
+    eng = ServeEngine(model, params, batch_size=4, capacity=64,
+                      max_new_tokens=10, block_size=4, prefill_chunk=8,
+                      burst=4, draft_model=dm, draft_params=dp, spec_k=3)
+    eng.submit(prompts[0], lane="batch")
+    results = []
+    joined = False
+    while eng.has_work:
+        results += eng.step()
+        if not joined and any(
+                s is not None and s.rid == 0 and len(s.tokens) >= 2
+                for s in eng._slots):
+            for p in prompts[1:]:
+                eng.submit(p, lane="batch")
+            joined = True
+    assert joined, "request 0 finished before the joiners were submitted"
+    out = {r.request_id: r for r in results}
+    for rid, p in enumerate(prompts):
+        assert list(out[rid].tokens) == \
+            _fresh_dense_tokens(model, params, p, 10), rid
+
+
+def test_transformer_spec_eos_truncation_identity(target_mp, draft_mp):
+    """An eos landing inside the drafted prefix truncates the round at
+    exactly the position non-speculative decode would stop at."""
+    model, params = target_mp
+    prompts = _prompts((5, 7), seed=9)
+    _, free = _serve(model, params, prompts, max_new=12)
+    # pick an eos that actually appears mid-stream in some output
+    eos = None
+    for r in free.values():
+        toks = list(r.tokens)
+        if len(toks) > 2:
+            eos = toks[len(toks) // 2]
+            break
+    assert eos is not None
+    _, ref = _serve(model, params, prompts, max_new=12, eos_id=eos)
+    _, out = _serve(model, params, prompts, draft=draft_mp, spec_k=4,
+                    max_new=12, eos_id=eos)
+    for rid in ref:
+        assert list(out[rid].tokens) == list(ref[rid].tokens), rid
+
+
+def test_transformer_spec_self_draft_accepts_everything(target_mp):
+    """Draft == target: every greedy proposal matches the target argmax,
+    so every drafted token is accepted (the upper bound of the rule)."""
+    model, params = target_mp
+    prompts = _prompts((5, 8), seed=3)
+    _, ref = _serve(model, params, prompts)
+    eng, out = _serve(model, params, prompts, draft=(model, params),
+                      spec_k=4)
+    for rid in ref:
+        assert list(out[rid].tokens) == list(ref[rid].tokens), rid
+    ls = eng.loop_stats()
+    assert ls["n_draft_proposed"] > 0
+    assert ls["n_draft_accepted"] == ls["n_draft_proposed"]
+    assert ls["spec_accept_rate"] == 1.0
+
+
+# -- preemption ---------------------------------------------------------------
+
+def test_transformer_spec_preempt_restore_identity(target_mp, draft_mp):
+    """A slot preempted mid-speculation spills BOTH cache pools plus the
+    spec PRNG/deficit state; the restored request's stream is identical
+    to a never-preempted speculative run (itself oracle-identical)."""
+    model, params = target_mp
+    dm, dp = draft_mp
+    prompts = _prompts((8, 6), seed=13)
+    _, ref = _serve(model, params, prompts, draft=draft_mp, spec_k=3)
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=8, block_size=4, prefill_chunk=8,
+                      burst=2, draft_model=dm, draft_params=dp, spec_k=3)
+    for p in prompts:
+        eng.submit(p, lane="batch")
+    pending = True
+    results = []
+    while eng.has_work:
+        if pending:
+            for s in eng._slots:
+                if s is not None and s.rid == 0 \
+                        and s.prefill_off >= len(s.prompt) \
+                        and len(s.tokens) >= 2:
+                    assert eng.preempt(0)
+                    pending = False
+                    break
+        results += eng.step()
+    assert not pending, "never caught rid 0 mid-decode"
+    assert eng.n_preemptions == 1 and eng.n_restores == 1
+    out = {r.request_id: r for r in results}
+    for rid, p in enumerate(prompts):
+        assert list(out[rid].tokens) == list(ref[rid].tokens)[:8], rid
+        assert list(out[rid].tokens) == \
+            _fresh_dense_tokens(model, params, p, 8), rid
+    # pool accounting stayed clean through the spill/restore
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+    assert eng._reserved == 0
+
+
+# -- distribution preservation ------------------------------------------------
+
+def _tv(a, b):
+    return 0.5 * float(np.abs(np.asarray(a, np.float64)
+                              - np.asarray(b, np.float64)).sum())
+
+
+def test_spec_accept_preserves_target_distribution():
+    """Seeded empirical check of the rejection rule itself: with draft
+    proposals drawn from q, the emitted tokens are distributed as the
+    *target* p at every position — accepted or resampled alike."""
+    B, G, V = 20000, 3, 8
+    rng = np.random.default_rng(0)
+    p = rng.dirichlet(np.ones(V) * 1.5, size=G + 1)
+    q = rng.dirichlet(np.ones(V) * 1.5, size=G)
+    draft = np.stack([rng.choice(V, size=B, p=qj) for qj in q],
+                     axis=1).astype(np.int32)
+    emit, n_acc = spec_accept(
+        jnp.asarray(draft),
+        jnp.broadcast_to(jnp.asarray(q, jnp.float32)[None], (B, G, V)),
+        jnp.broadcast_to(jnp.asarray(p, jnp.float32)[None], (B, G + 1, V)),
+        jnp.full((B,), G, jnp.int32),
+        jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(7), i))(
+            jnp.arange(B)))
+    emit, n_acc = np.asarray(emit), np.asarray(n_acc)
+    # position 0 is always emitted and must be ~ p[0]
+    hist0 = np.bincount(emit[:, 0], minlength=V) / B
+    assert _tv(hist0, p[0]) < 0.03
+    # position 1, over rows whose first draft was accepted, must be ~ p[1]
+    sel = n_acc >= 1
+    assert sel.sum() > 2000
+    hist1 = np.bincount(emit[sel, 1], minlength=V) / sel.sum()
+    assert _tv(hist1, p[1]) < 0.05
+    # full acceptance draws the bonus from the target's extra row alone
+    sel = n_acc == G
+    if sel.sum() > 1000:
+        histG = np.bincount(emit[sel, G], minlength=V) / sel.sum()
+        assert _tv(histG, p[G]) < 0.08
+
+
+def test_spec_accept_budget_rows_draw_from_target_row():
+    """A zero-budget row accepts nothing and its replacement comes from
+    the target row alone (draft probs there are garbage by contract)."""
+    B, G, V = 8000, 2, 6
+    rng = np.random.default_rng(1)
+    p0 = rng.dirichlet(np.ones(V))
+    garbage = jnp.asarray(rng.random((B, G, V)), jnp.float32)  # not a dist
+    emit, n_acc = spec_accept(
+        jnp.zeros((B, G), jnp.int32), garbage,
+        jnp.broadcast_to(jnp.asarray(p0, jnp.float32)[None, None],
+                         (B, G + 1, V)),
+        jnp.zeros((B,), jnp.int32),
+        jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(9), i))(
+            jnp.arange(B)))
+    emit, n_acc = np.asarray(emit), np.asarray(n_acc)
+    assert (n_acc == 0).all()
+    hist = np.bincount(emit[:, 0], minlength=V) / B
+    assert _tv(hist, p0) < 0.04
+
+
+def test_transformer_spec_sampled_matches_nonspec_distribution(
+        target_mp, draft_mp):
+    """End-to-end: the sampled spec engine's per-step token marginals
+    match the non-spec engine's.  Token 0 is drawn pre-speculation from
+    the same (seed, rid, step) stream, so it must be *identical*; token
+    1 is spec-affected, so its empirical distribution over many rids is
+    compared in total variation."""
+    model, params = target_mp
+    prompt = _prompts((6,), seed=21)[0]
+    n = 240
+    kw = dict(max_new=3, temperature=0.7, top_k=4, seed=11,
+              batch_size=8, burst=2)
+    _, ref = _serve(model, params, [prompt] * n, **kw)
+    _, out = _serve(model, params, [prompt] * n, draft=draft_mp,
+                    spec_k=3, **kw)
+    t0_ref = [ref[i].tokens[0] for i in range(n)]
+    t0_out = [out[i].tokens[0] for i in range(n)]
+    assert t0_ref == t0_out
+    V = TINY.vocab_size
+    h_ref = np.bincount([ref[i].tokens[1] for i in range(n)],
+                        minlength=V) / n
+    h_out = np.bincount([out[i].tokens[1] for i in range(n)],
+                        minlength=V) / n
+    # top_k=4 concentrates the support; sampling noise at n=240 keeps
+    # honest runs well under this bound while an off-by-one-row bug in
+    # the accept rule lands far above it
+    assert _tv(h_ref, h_out) < 0.25
+
+
+# -- stats & gating -----------------------------------------------------------
+
+def test_transformer_spec_loop_stats(target_mp, draft_mp):
+    model, params = target_mp
+    eng, _ = _serve(model, params, _prompts((5, 7), seed=2),
+                    draft=draft_mp, spec_k=3)
+    ls = eng.loop_stats()
+    for key in ("spec_k", "n_spec_rounds", "n_spec_tokens",
+                "n_draft_proposed", "n_draft_accepted",
+                "spec_accept_hist", "spec_accept_rate"):
+        assert key in ls, key
+    assert ls["spec_k"] == 3
+    assert len(ls["spec_accept_hist"]) == 4
+    assert sum(ls["spec_accept_hist"]) == ls["n_spec_rounds"]
+    assert 0 <= ls["n_draft_accepted"] <= ls["n_draft_proposed"]
+    assert 0.0 <= ls["spec_accept_rate"] <= 1.0
+    assert ls["n_spec_tokens"] >= ls["n_spec_rounds"]  # >= 1 token/round
+    # non-spec engines advertise none of this
+    eng2, _ = _serve(model, params, _prompts((4,), seed=2))
+    assert "n_spec_rounds" not in eng2.loop_stats()
+
+
+def test_transformer_spec_gating_errors(target_mp, draft_mp):
+    model, params = target_mp
+    dm, dp = draft_mp
+    with pytest.raises(ValueError, match="requires draft_model"):
+        ServeEngine(model, params, spec_k=2)
+    with pytest.raises(ValueError, match="requires paged mode"):
+        ServeEngine(model, params, paged=False, draft_model=dm,
+                    draft_params=dp, spec_k=2)
+    with pytest.raises(ValueError, match="prefill_chunk >= 2"):
+        ServeEngine(model, params, prefill_chunk=1, draft_model=dm,
+                    draft_params=dp, spec_k=2)
+    with pytest.raises(ValueError, match="share_prefix=True is incompatible"):
+        ServeEngine(model, params, share_prefix=True, draft_model=dm,
+                    draft_params=dp, spec_k=2)
+    with pytest.raises(ValueError, match="spec_k must be >= 0"):
+        ServeEngine(model, params, spec_k=-1)
+    with pytest.raises(ValueError, match="vocab mismatch"):
+        odd = build_model(DRAFT.replace(arch_id="tiny-odd-vocab",
+                                        vocab_size=32))
+        ServeEngine(model, params, draft_model=odd, draft_params={},
+                    spec_k=2)
+    # spec mode forces prefix sharing off (COW forks only cover the
+    # target pool) — auto share_prefix must resolve to False
+    eng = ServeEngine(model, params, draft_model=dm, draft_params=dp,
+                      spec_k=2)
+    assert eng.share_prefix is False
+
+
+@pytest.mark.parametrize("family", RECURRENT_FAMILIES)
+def test_spec_rejected_for_recurrent_family(family, target_mp, draft_mp):
+    """Rollback is arithmetic on lengths; recurrent state advanced
+    through rejected tokens cannot be rolled back.  Both roles gated."""
+    model, params = target_mp
+    dm, dp = draft_mp
+    rec = build_model(FAMILY_CFGS[family])
+    with pytest.raises(ValueError, match="target model .*recurrent"):
+        ServeEngine(rec, {}, draft_model=dm, draft_params=dp, spec_k=2)
+    with pytest.raises(ValueError, match="draft model .*recurrent"):
+        ServeEngine(model, params, draft_model=rec, draft_params={},
+                    spec_k=2)
