@@ -18,7 +18,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: e1,e2,e3,e4,e5,e6,e7,e8,e9,roofline")
+                    help="comma list: e1,e2,e3,e4,e5,e6,e7,e8,e9,"
+                         "e10_quant,roofline")
     ap.add_argument("--json", default=None,
                     help="write rows as machine-readable JSON here "
                          "(default: BENCH_serving.json on full runs; "
@@ -32,12 +33,12 @@ def main() -> None:
 
     from . import (e1_multimodel, e2_ars, e3_mtcnn, e4_overhead, e5_batching,
                    e6_decode_loop, e7_frontdoor, e8_sharded, e9_speculative,
-                   roofline)
+                   e10_quant, roofline)
     sections = [("e1", e1_multimodel), ("e2", e2_ars), ("e3", e3_mtcnn),
                 ("e4", e4_overhead), ("e5", e5_batching),
                 ("e6", e6_decode_loop), ("e7", e7_frontdoor),
                 ("e8", e8_sharded), ("e9", e9_speculative),
-                ("roofline", roofline)]
+                ("e10_quant", e10_quant), ("roofline", roofline)]
     print("name,us_per_call,derived")
     failed = False
     report = {"sections": {}, "rows": []}

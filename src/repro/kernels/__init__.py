@@ -1,3 +1,22 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from __future__ import annotations
+
+from typing import Optional
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a Pallas ``interpret=`` argument.
+
+    Every ``kernels/*/ops.py`` entry point takes ``interpret=None`` and
+    runs it through here: ``None`` autodetects the backend (CPU hosts
+    get interpret mode — compiled Pallas silently miscompiles or
+    crashes there), an explicit bool is passed through untouched.
+    Resolving at call time (not import time) respects late backend
+    selection (``jax.config``/``JAX_PLATFORMS`` set after import).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    import jax
+    return jax.default_backend() == "cpu"

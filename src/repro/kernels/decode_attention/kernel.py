@@ -96,6 +96,101 @@ def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_quant_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref,
+                               ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref,
+                               *, scale, block_size, n_pages):
+    """``_paged_decode_kernel`` with int8 K/V pools dequantized in the
+    inner loop: the streamed (bs, hd) int8 tile is widened to f32 and
+    multiplied by its per-row scale vector (bs,) right before the score
+    dot — HBM traffic is the int8 pool plus a bs-float sliver of scales
+    per page, ~1/4 of the f32 stream for the same cache content."""
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]  # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bs)
+    kpos = ip * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[b], s, NEG)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    m_ref[0, 0] = m_new
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]  # (bs, hd)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                 page_table, lengths, *,
+                                 interpret: bool = True):
+    """Int8 variant of ``paged_decode_attention``.
+
+    q: (B,H,hd) float; pools: (num_blocks,KV,bs,hd) int8;
+    k_scale/v_scale: (num_blocks,KV,bs) float32 per-row scales;
+    page_table: (B,P) int32; lengths: (B,) int32 -> (B,H,hd).
+
+    Same split-K page walk; the scale pools stream through their own
+    scalar-prefetch-indirected BlockSpecs so each (bs, hd) int8 tile
+    arrives with its (bs,) scale vector and is dequantized in VMEM.
+    """
+    B, H, hd = q.shape
+    KV, bs = k_pages.shape[1], k_pages.shape[2]
+    P = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(B)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_quant_kernel, scale=scale,
+                          block_size=bs, n_pages=P),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, H, P),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda b, h, ip, ln, pt: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd),
+                             lambda b, h, ip, ln, pt: (pt[b, ip], h // G, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd),
+                             lambda b, h, ip, ln, pt: (pt[b, ip], h // G, 0, 0)),
+                pl.BlockSpec((1, 1, bs),
+                             lambda b, h, ip, ln, pt: (pt[b, ip], h // G, 0)),
+                pl.BlockSpec((1, 1, bs),
+                             lambda b, h, ip, ln, pt: (pt[b, ip], h // G, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, hd),
+                                   lambda b, h, ip, ln, pt: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table, q[:, :, None, :], k_pages, v_pages,
+      k_scale, v_scale)
+    return out[:, :, 0, :]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
                            interpret: bool = True):

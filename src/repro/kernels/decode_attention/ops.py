@@ -1,13 +1,17 @@
 """Public op: decode attention in model-native layout with padding."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
-from .kernel import decode_attention, paged_decode_attention
+from .. import default_interpret
+from .kernel import (decode_attention, paged_decode_attention,
+                     paged_decode_attention_quant)
 
 
 def decode_attention_bhd(q, k_cache, v_cache, length, *, block_k: int = 512,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """q: (B,1,H,hd); caches: (B,C,KV,hd) -> (B,1,H,hd)."""
     B, _, H, hd = q.shape
     C = k_cache.shape[1]
@@ -19,12 +23,12 @@ def decode_attention_bhd(q, k_cache, v_cache, length, *, block_k: int = 512,
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
     o = decode_attention(q[:, 0], kt, vt, length, block_k=bk,
-                         interpret=interpret)
+                         interpret=default_interpret(interpret))
     return o[:, None]
 
 
 def paged_decode_attention_bhd(q, k_pages, v_pages, page_table, lengths, *,
-                               interpret: bool = True):
+                               interpret: Optional[bool] = None):
     """Paged decode attention in the serving engine's layout.
 
     q: (B,1,H,hd); k_pages/v_pages: (num_blocks, block_size, KV, hd) —
@@ -34,5 +38,25 @@ def paged_decode_attention_bhd(q, k_pages, v_pages, page_table, lengths, *,
     kt = jnp.moveaxis(k_pages, 2, 1)   # -> (nb, KV, bs, hd)
     vt = jnp.moveaxis(v_pages, 2, 1)
     o = paged_decode_attention(q[:, 0], kt, vt, page_table, lengths,
-                               interpret=interpret)
+                               interpret=default_interpret(interpret))
+    return o[:, None]
+
+
+def paged_decode_attention_quant_bhd(q, k_pages, v_pages, k_scale, v_scale,
+                                     page_table, lengths, *,
+                                     interpret: Optional[bool] = None):
+    """Int8 paged decode attention in the serving engine's layout.
+
+    q: (B,1,H,hd) float; k_pages/v_pages: (num_blocks, block_size, KV,
+    hd) int8 — the ``kv_dtype="int8"`` paged-cache leaf layout;
+    k_scale/v_scale: (num_blocks, block_size, KV) float32 per-row
+    scales; page_table: (B,P); lengths: (B,).  Returns (B,1,H,hd).
+    """
+    kt = jnp.moveaxis(k_pages, 2, 1)    # -> (nb, KV, bs, hd)
+    vt = jnp.moveaxis(v_pages, 2, 1)
+    kst = jnp.moveaxis(k_scale, 2, 1)   # -> (nb, KV, bs)
+    vst = jnp.moveaxis(v_scale, 2, 1)
+    o = paged_decode_attention_quant(q[:, 0], kt, vt, kst, vst,
+                                     page_table, lengths,
+                                     interpret=default_interpret(interpret))
     return o[:, None]

@@ -46,3 +46,14 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
     kg = kg.reshape(B, KV, P * bs, hd)
     vg = vg.reshape(B, KV, P * bs, hd)
     return decode_attention_ref(q, kg, vg, lengths)
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     page_table, lengths):
+    """Oracle for the int8 paged kernel: dequantize the whole pool
+    (``int8 * scale[..., None]`` with per-(block, head, row) f32 scales
+    of shape (num_blocks, KV, bs)) and delegate to the f32 paged oracle
+    — the kernel's in-loop dequant must match this exactly."""
+    kf = k_pages.astype(jnp.float32) * k_scale[..., None]
+    vf = v_pages.astype(jnp.float32) * v_scale[..., None]
+    return paged_decode_attention_ref(q, kf, vf, page_table, lengths)

@@ -1,14 +1,18 @@
 """Public op: layout adaptation (B,S,H,hd) <-> kernel layout, padding."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from .. import default_interpret
 from .kernel import flash_attention
 
 
 def flash_attention_bshd(q, k, v, *, causal: bool = True,
                          sliding_window: int = 0, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = True):
+                         block_k: int = 128,
+                         interpret: Optional[bool] = None):
     """q: (B,S,H,hd); k,v: (B,T,KV,hd) — model-native layout."""
     S = q.shape[1]
     T = k.shape[1]
@@ -29,5 +33,6 @@ def flash_attention_bshd(q, k, v, *, causal: bool = True,
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     o = flash_attention(qt, kt, vt, causal=causal,
                         sliding_window=sliding_window,
-                        block_q=bq, block_k=bk, interpret=interpret)
+                        block_q=bq, block_k=bk,
+                        interpret=default_interpret(interpret))
     return jnp.moveaxis(o[:, :, :S], 1, 2)

@@ -1,12 +1,15 @@
 """Public op: shape-agnostic fused top-k gating."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from .. import default_interpret
 from .kernel import gating_topk
 
 
-def topk(scores, k: int, *, interpret: bool = True):
+def topk(scores, k: int, *, interpret: Optional[bool] = None):
     """scores: (..., E) -> (vals (...,k), idx (...,k))."""
     shape = scores.shape
     E = shape[-1]
@@ -19,7 +22,8 @@ def topk(scores, k: int, *, interpret: bool = True):
         pad = (-T) % bt
     if pad:
         flat = jnp.pad(flat, ((0, pad), (0, 0)), constant_values=-1e30)
-    vals, idx = gating_topk(flat, k, block_t=bt, interpret=interpret)
+    vals, idx = gating_topk(flat, k, block_t=bt,
+                            interpret=default_interpret(interpret))
     vals, idx = vals[:T], idx[:T]
     return (vals.reshape(shape[:-1] + (k,)).astype(scores.dtype),
             idx.reshape(shape[:-1] + (k,)))

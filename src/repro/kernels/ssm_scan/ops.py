@@ -1,13 +1,16 @@
 """Public op: padding + dtype handling for the selective-scan kernel."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from .. import default_interpret
 from .kernel import selective_scan_kernel
 
 
 def selective_scan(dt, Bc, Cc, xs, A, D, h0=None, *, block_d: int = 128,
-                   chunk_t: int = 256, interpret: bool = True):
+                   chunk_t: int = 256, interpret: Optional[bool] = None):
     """Same contract as models.mamba.selective_scan (h0 must be None —
     prefill starts cold; decode uses the single-step jnp path)."""
     assert h0 is None, "kernel path supports cold start only"
@@ -27,7 +30,8 @@ def selective_scan(dt, Bc, Cc, xs, A, D, h0=None, *, block_d: int = 128,
         Bc = jnp.pad(Bc, ((0, 0), (0, pad_t), (0, 0)))
         Cc = jnp.pad(Cc, ((0, 0), (0, pad_t), (0, 0)))
     y, h_last = selective_scan_kernel(dt, xs, Bc, Cc, A, D, block_d=bd,
-                                      chunk_t=ct, interpret=interpret)
+                                      chunk_t=ct,
+                                      interpret=default_interpret(interpret))
     y = y[:, :S, :di]
     h_last = h_last[:, :di]
     return y, h_last

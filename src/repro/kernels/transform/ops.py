@@ -2,11 +2,13 @@
 from __future__ import annotations
 
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import default_interpret
 from .kernel import LANE, SUBLANE, fused_transform_2d
 from .ref import fused_transform_ref
 import functools
@@ -26,7 +28,7 @@ def fused_transform_xla(x, *, scale=1.0, bias=0.0, lo=-np.inf, hi=np.inf,
 
 def fused_transform(x, *, scale: float = 1.0, bias: float = 0.0,
                     lo: float = -np.inf, hi: float = np.inf,
-                    out_dtype=None, interpret: bool = True):
+                    out_dtype=None, interpret: Optional[bool] = None):
     """Arbitrary-shape fused affine+clamp+cast via the Pallas kernel."""
     x = jnp.asarray(x)
     out_dtype = jnp.dtype(out_dtype) if out_dtype else x.dtype
@@ -44,5 +46,5 @@ def fused_transform(x, *, scale: float = 1.0, bias: float = 0.0,
     y = fused_transform_2d(flat.reshape(rows_pad, cols), scale=scale,
                            bias=bias, lo=float(lo), hi=float(hi),
                            out_dtype=out_dtype, block_rows=block_rows,
-                           interpret=interpret)
+                           interpret=default_interpret(interpret))
     return jnp.ravel(y)[:n].reshape(x.shape)

@@ -58,7 +58,7 @@ def _print_spec_stats(engine):
           f"{ls['spec_accept_rate']:.2f}, hist {ls['spec_accept_hist']}")
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-360m")
     ap.add_argument("--family", choices=["arch"] + sorted(FAMILY_CONFIGS),
@@ -131,6 +131,14 @@ def main():
     ap.add_argument("--retain-ttl-s", type=float, default=None,
                     help="paged mode: retire retained blocks older than "
                          "this many seconds (default: no TTL)")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default=None,
+                    help="KV cache storage precision (default: engine "
+                         "default, f32).  'int8' block-quantizes the paged "
+                         "pool with per-row scales — ~3-4x the resident "
+                         "requests at equal pool bytes, greedy-token drift "
+                         "bounded by the drift-tolerance suite (paged mode "
+                         "only; incompatible with --mesh and --spec-k)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: draft tokens proposed and "
                          "verified per burst round (0 = off; paged "
@@ -147,7 +155,58 @@ def main():
                          "pending (1 = drain every token; the engine "
                          "degrades to 1 itself whenever the queue is "
                          "non-empty, so join latency is unchanged)")
-    args = ap.parse_args()
+    return ap
+
+
+_RECURRENT_FAMILIES = ("mamba", "xlstm", "hybrid")
+
+
+def validate_args(args) -> None:
+    """Fail fast on flag combinations the engine would reject anyway —
+    but deep inside construction, after weights are already built.  Each
+    check is a one-line error naming both offending flags, raised before
+    any model work starts."""
+    if args.requests < 1:
+        raise SystemExit("--requests must be >= 1")
+    if args.shared_prompt >= args.prompt_len - 1:
+        # the unique suffix needs at least one token of length spread
+        raise SystemExit("--shared-prompt must be < --prompt-len - 1")
+    if args.spec_k > 0:
+        if args.mesh is not None:
+            raise SystemExit(
+                "--spec-k and --mesh are incompatible: speculative "
+                "decoding under a device mesh is not implemented")
+        if args.share_prefix == "on":
+            raise SystemExit(
+                "--spec-k and --share-prefix on are incompatible: the "
+                "draft pool rides the target's page tables but COW forks "
+                "only cover the target pool (leave --share-prefix auto)")
+        if args.family in _RECURRENT_FAMILIES:
+            raise SystemExit(
+                f"--spec-k and --family {args.family} are incompatible: "
+                "recurrent state cannot roll back rejected draft tokens")
+        if args.paged == "off":
+            raise SystemExit(
+                "--spec-k and --paged off are incompatible: speculative "
+                "rollback is arithmetic on the paged per-slot lengths")
+    if args.kv_dtype == "int8":
+        if args.paged == "off":
+            raise SystemExit(
+                "--kv-dtype int8 and --paged off are incompatible: "
+                "quantized KV lives in the paged block pool")
+        if args.spec_k > 0:
+            raise SystemExit(
+                "--kv-dtype int8 and --spec-k are incompatible: the "
+                "draft/verify path is not quantization-aware")
+        if args.mesh is not None:
+            raise SystemExit(
+                "--kv-dtype int8 and --mesh are incompatible: the scale "
+                "pools have no sharding specs yet")
+
+
+def main():
+    args = build_parser().parse_args()
+    validate_args(args)
 
     if args.family != "arch":
         cfg = FAMILY_CONFIGS[args.family]
@@ -201,13 +260,8 @@ def main():
                          mesh=mesh, retain_cap=args.retain_cap,
                          retain_ttl_s=args.retain_ttl_s,
                          draft_model=draft_model, draft_params=draft_params,
-                         spec_k=args.spec_k)
+                         spec_k=args.spec_k, kv_dtype=args.kv_dtype)
 
-    if args.requests < 1:
-        raise SystemExit("--requests must be >= 1")
-    if args.shared_prompt >= args.prompt_len - 1:
-        # the unique suffix needs at least one token of length spread
-        raise SystemExit("--shared-prompt must be < --prompt-len - 1")
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prompt).astype(np.int32)
     lengths = [int(rng.integers(max(4, args.shared_prompt + 1),
@@ -304,6 +358,8 @@ def main():
         print(f"paged cache: {a.num_blocks} blocks x {a.block_size} tokens, "
               f"{s['n_free']} free / {s['n_shared']} shared / "
               f"{s['n_private']} private after drain")
+        print(f"kv storage: {s['kv_dtype']}, {s['bytes_per_block']} "
+              f"bytes/block, {s['pool_bytes'] / 1e6:.2f} MB pool")
         if engine.state_store is not None:
             print(f"state store: {s['num_state_slots']} slabs, "
                   f"{s['n_state_free']} free / {s['n_state_live']} live "

@@ -363,6 +363,76 @@ def gqa_paged_step(p, cfg: ModelConfig, x, k_store, v_store, page_table,
 
 
 # ---------------------------------------------------------------------------
+# int8 block-quantized paged KV
+# ---------------------------------------------------------------------------
+
+QUANT_EPS = 1e-8
+
+
+def quantize_kv(x):
+    """Symmetric per-row-per-head int8 quantization over head_dim.
+
+    x: (..., hd) float -> (q (..., hd) int8, scale (...) float32) with
+    ``dequant = q.astype(f32) * scale[..., None]``.  The scale is
+    amax/127 over the head_dim axis only, so every (token, head) row
+    carries its own scale: a row written once is never requantized when
+    later tokens land in the same block (incremental prefill/decode
+    appends stay exact per-row, which a whole-block scale could not
+    guarantee).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, QUANT_EPS) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of ``quantize_kv``: (..., hd) int8 × (...) f32 -> f32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def gqa_paged_step_quant(p, cfg: ModelConfig, x, k_store, v_store,
+                         k_scale, v_scale, page_table, lengths, t_valid):
+    """Int8 variant of ``gqa_paged_step``.
+
+    k_store/v_store: (num_blocks, block_size, KV, hd) int8 pools;
+    k_scale/v_scale: (num_blocks, block_size, KV) float32 per-row scale
+    pools that ride the same page-table indirection.  New K/V rows are
+    quantized post-RoPE and scattered alongside their scales; the gather
+    dequantizes back to f32 before the (unchanged) ``paged_attention``
+    core, so the only numeric difference from the f32 path is the int8
+    round-trip on cached keys/values.  Returns
+    (out, k_store, v_store, k_scale, v_scale).
+    """
+    from .sharding import constrain
+    B, T, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _rope_qk(cfg, q, k, positions)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    k_store = paged_scatter(k_store, kq, page_table, lengths, t_valid)
+    v_store = paged_scatter(v_store, vq, page_table, lengths, t_valid)
+    # scale rows (B,T,KV) take the same flat-scatter path — paged_scatter
+    # is generic over trailing dims, so the (nb,bs,KV) scale pool is just
+    # a storage with one fewer trailing axis
+    k_scale = paged_scatter(k_scale, ks, page_table, lengths, t_valid)
+    v_scale = paged_scatter(v_scale, vs, page_table, lengths, t_valid)
+    k_store = constrain(k_store, None, None, None, "model")
+    v_store = constrain(v_store, None, None, None, "model")
+    k_scale = constrain(k_scale, None, None, None)
+    v_scale = constrain(v_scale, None, None, None)
+    k_gath = dequantize_kv(paged_gather(k_store, page_table),
+                           paged_gather(k_scale, page_table))
+    v_gath = dequantize_kv(paged_gather(v_store, page_table),
+                           paged_gather(v_scale, page_table))
+    out = paged_attention(q, k_gath, v_gath, positions)
+    return (out.reshape(B, T, -1) @ p["wo"],
+            k_store, v_store, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
 # full attention layers (projection + rope + core) — GQA
 # ---------------------------------------------------------------------------
 

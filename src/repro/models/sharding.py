@@ -217,6 +217,11 @@ def paged_cache_specs(cache, axis_sizes=None):
             return P(*((None,) * leaf.ndim))
         if name in ("k", "v"):           # (nb, bs, KV, hd): shard head_dim
             spec = (None, None, None, "model")
+        elif name in ("k_scale", "v_scale"):
+            # int8 pools' per-row scales (nb, bs, KV): head_dim is
+            # already reduced away, and KV head counts are too small to
+            # shard — replicate (a few bytes per block)
+            spec = (None, None, None)
         elif name == "conv":             # (ns, dc-1, di)
             spec = (None, None, "model")
         elif name == "ssm":              # (ns, di, d_state)

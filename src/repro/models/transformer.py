@@ -279,9 +279,17 @@ def _paged_sublayer(p, cfg: ModelConfig, desc: Desc, x, state, page_table,
     _, norm = make_norm(cfg.norm)
     h = norm(p["norm1"], x)
     if block == "attn":
-        y, k, v = A.gqa_paged_step(p["attn"], cfg, h, state["k"], state["v"],
-                                   page_table, lengths, t_valid)
-        state = {"k": k, "v": v}
+        if "k_scale" in state:   # int8 block-quantized pool (+ scale pools)
+            y, k, v, ks, vs = A.gqa_paged_step_quant(
+                p["attn"], cfg, h, state["k"], state["v"],
+                state["k_scale"], state["v_scale"],
+                page_table, lengths, t_valid)
+            state = {"k": k, "v": v, "k_scale": ks, "v_scale": vs}
+        else:
+            y, k, v = A.gqa_paged_step(p["attn"], cfg, h,
+                                       state["k"], state["v"],
+                                       page_table, lengths, t_valid)
+            state = {"k": k, "v": v}
     else:
         ns = jax.tree.leaves(state)[0].shape[0]
         gathered = jax.tree.map(
@@ -634,7 +642,7 @@ class TransformerLM:
 
     def init_paged_cache(self, num_blocks: int, block_size: int,
                          dtype=jnp.bfloat16, num_state_slots: int = 0,
-                         shardings=None):
+                         shardings=None, kv_dtype: Optional[str] = None):
         """Shared block pool + recurrent state slabs.
 
         Every attn layer gets (nb, bs, KV, hd) K/V stores with no batch
@@ -643,6 +651,14 @@ class TransformerLM:
         ``num_state_slots`` axis — slots own exactly one slab each (the
         engine's ``StateStore`` hands them out).  Periodic layers stack
         either kind on a leading scan axis.
+
+        ``kv_dtype="int8"`` switches the attn K/V stores to int8 with
+        per-(block, row, head) float32 scale pools ``k_scale``/
+        ``v_scale`` of shape (nb, bs, KV) living in the same state dict
+        — they share the leading block axis, so COW forks, spill/restore
+        gathers/scatters, and mesh placement all ride the existing
+        pytree traversals untouched.  Recurrent slabs are never
+        quantized (they are running f32 summaries, not token caches).
 
         ``shardings`` (a matching pytree of ``jax.sharding.Sharding``,
         see :func:`repro.models.sharding.paged_cache_specs`) places each
@@ -658,11 +674,25 @@ class TransformerLM:
             raise ValueError(
                 f"family {cfg.family!r} has recurrent layers: "
                 "init_paged_cache needs num_state_slots >= 1")
+        if kv_dtype not in (None, "int8"):
+            raise ValueError(f"kv_dtype must be None or 'int8', "
+                             f"got {kv_dtype!r}")
         kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
 
         def store(desc):
             if desc[0] in RECURRENT_BLOCKS:
                 return _sublayer_state(cfg, desc, num_state_slots, 0, dtype)
+            if kv_dtype == "int8":
+                return {
+                    "k": jnp.zeros((num_blocks, block_size, kv, hd),
+                                   jnp.int8),
+                    "v": jnp.zeros((num_blocks, block_size, kv, hd),
+                                   jnp.int8),
+                    "k_scale": jnp.zeros((num_blocks, block_size, kv),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((num_blocks, block_size, kv),
+                                         jnp.float32),
+                }
             return {"k": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
                     "v": jnp.zeros((num_blocks, block_size, kv, hd), dtype)}
 

@@ -193,7 +193,8 @@ class ServeEngine:
                  burst: int = 1, trace_logits: bool = False,
                  mesh=None, retain_cap: Optional[int] = None,
                  retain_ttl_s: Optional[float] = None,
-                 draft_model=None, draft_params=None, spec_k: int = 0):
+                 draft_model=None, draft_params=None, spec_k: int = 0,
+                 kv_dtype: Optional[str] = None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -201,6 +202,21 @@ class ServeEngine:
         self.max_new_tokens = max_new_tokens
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
+        # kv_dtype: storage precision of the serving KV pool.  "f32" /
+        # "bf16" simply pin cache_dtype; "int8" switches the paged pool
+        # to block-quantized int8 storage with per-row f32 scale leaves
+        # (models/attention.gqa_paged_step_quant) — a capacity lever,
+        # not a numerics-preserving one, so quantized mode is covered by
+        # the drift-tolerance suite instead of bitwise conformance.
+        if kv_dtype not in (None, "f32", "bf16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'f32', 'bf16' or 'int8', got {kv_dtype!r}")
+        if kv_dtype == "f32":
+            self.cache_dtype = cache_dtype = jnp.float32
+        elif kv_dtype == "bf16":
+            self.cache_dtype = cache_dtype = jnp.bfloat16
+        self.kv_dtype = kv_dtype
+        self._quant = kv_dtype == "int8"
         if temperature < 0:
             raise ValueError(f"temperature must be >= 0, got {temperature}")
         if top_k is not None and top_k < 1:
@@ -372,6 +388,29 @@ class ServeEngine:
                     "target pool.  Leave share_prefix on auto (speculative "
                     "mode disables it) or set it False.")
             self.share_prefix = False
+        if self._quant:
+            if not self.paged:
+                raise ValueError(
+                    "kv_dtype='int8' requires paged mode: quantized KV "
+                    "lives in the shared block pool (the dense per-slot "
+                    "cache stays full precision)")
+            if self._spec:
+                raise ValueError(
+                    "kv_dtype='int8' is incompatible with spec_k > 0: the "
+                    "draft pool and the greedy verify-identity guarantee "
+                    "are not quantization-aware.  Serve quantized without "
+                    "speculation (spec_k=0).")
+            if mesh is not None:
+                raise NotImplementedError(
+                    "kv_dtype='int8' under mesh= is not implemented yet: "
+                    "the f32 scale pools need audited sharding specs "
+                    "before the quantized pool can be distributed")
+            sig = inspect.signature(model.init_paged_cache)
+            if "kv_dtype" not in sig.parameters:
+                raise ValueError(
+                    f"kv_dtype='int8' but {type(model).__name__}."
+                    "init_paged_cache does not accept kv_dtype= (the model "
+                    "does not implement quantized pools)")
         self._pages_per_slot = -(-capacity // block_size)
         if num_blocks is None:
             num_blocks = batch_size * self._pages_per_slot
@@ -423,6 +462,7 @@ class ServeEngine:
                 else jax.jit(_generic_scatter_pages, donate_argnums=(0,))
         self._paged_cache = None
         self._draft_cache = None
+        self._kv_bytes_per_block_cache = None
         # optional per-request logit recording (conformance tests)
         self.trace_logits = trace_logits
         self.logit_trace: Dict[int, List[np.ndarray]] = {}
@@ -586,17 +626,63 @@ class ServeEngine:
 
     def pool_stats(self) -> Optional[Dict[str, int]]:
         """Block-pool occupancy incl. shared vs private split (paged),
-        plus state-slab occupancy for recurrent families."""
+        plus state-slab occupancy for recurrent families, plus the pool
+        footprint: ``kv_dtype`` (storage precision), ``bytes_per_block``
+        (all attn K/V leaves — scales included for int8 — per physical
+        block) and ``pool_bytes`` — the numbers the capacity planning in
+        the quantization benchmark (``e10_quant``) is driven by."""
         if self.allocator is None:
             return None
         stats = self.allocator.stats()
         stats["n_reserved"] = self._reserved
+        stats["kv_dtype"] = self.kv_dtype or {
+            "float32": "f32", "bfloat16": "bf16",
+        }.get(jnp.dtype(self.cache_dtype).name,
+              jnp.dtype(self.cache_dtype).name)
+        stats["bytes_per_block"] = self.kv_bytes_per_block()
+        stats["pool_bytes"] = \
+            stats["bytes_per_block"] * self.allocator.num_blocks
         if self.state_store is not None:
             s = self.state_store.stats()
             stats["num_state_slots"] = s["num_slots"]
             stats["n_state_free"] = s["n_free"]
             stats["n_state_live"] = s["n_live"]
         return stats
+
+    def kv_bytes_per_block(self) -> int:
+        """HBM bytes one physical block costs across every attn layer's
+        pool leaves (K + V, plus the f32 scale slivers under
+        ``kv_dtype='int8'``).  Computed from ``jax.eval_shape`` of the
+        model's pool constructor — no pool has to exist yet — and keyed
+        on the leaf *names* (k/v/k_scale/v_scale) so recurrent state
+        slabs (sized by slots, not blocks) never pollute the figure."""
+        if self._kv_bytes_per_block_cache is None:
+            if self.allocator is None:
+                return 0
+            kw = self._paged_cache_kwargs()
+            struct = jax.eval_shape(
+                lambda: self.model.init_paged_cache(
+                    self.allocator.num_blocks, self.block_size,
+                    dtype=self.cache_dtype, **kw))
+            kv_names = {"k", "v", "k_scale", "v_scale"}
+
+            def leaf_name(path):
+                for p in reversed(path):
+                    if isinstance(p, jax.tree_util.DictKey):
+                        return p.key
+                return None
+
+            def nbytes(leaf):
+                return int(np.prod(leaf.shape)) * jnp.dtype(
+                    leaf.dtype).itemsize
+
+            leaves = jax.tree_util.tree_flatten_with_path(struct)[0]
+            tot = sum(nbytes(l) for path, l in leaves
+                      if leaf_name(path) in kv_names)
+            if tot == 0:    # model without the k/v naming convention
+                tot = sum(nbytes(l) for _, l in leaves)
+            self._kv_bytes_per_block_cache = tot // self.allocator.num_blocks
+        return self._kv_bytes_per_block_cache
 
     def loop_stats(self) -> Dict[str, int]:
         """Decode-loop efficiency counters: device steps vs host drains
@@ -1109,6 +1195,11 @@ class ServeEngine:
         it, newly completed pages are published to the content table
         for future joiners.
         """
+        # periodic retention sweep: TTL expiry must not depend on
+        # allocation traffic — an idle server still ticks through here,
+        # so expired prefix blocks are retired even with no admissions
+        # or completions in flight (no-op without retain_ttl_s)
+        self.allocator.sweep()
         self._admit_paged()
         finished = self._evict_paged()
         busy = [(i, s) for i, s in enumerate(self._slots) if s is not None]
@@ -1501,8 +1592,7 @@ class ServeEngine:
         block/slot axes replicated, feature dims on "model"."""
         from jax.sharding import NamedSharding
         from ..models.sharding import paged_cache_specs
-        kw = {"num_state_slots": self.num_state_slots} \
-            if self.state_store is not None else {}
+        kw = self._paged_cache_kwargs()
         struct = jax.eval_shape(
             lambda: self.model.init_paged_cache(
                 self.allocator.num_blocks, self.block_size,
@@ -1511,10 +1601,18 @@ class ServeEngine:
         specs = paged_cache_specs(struct, axis_sizes=axis_sizes)
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
 
+    def _paged_cache_kwargs(self):
+        """Keyword args for ``model.init_paged_cache`` beyond the block
+        geometry: state-slab provisioning, and the int8 switch."""
+        kw = {"num_state_slots": self.num_state_slots} \
+            if self.state_store is not None else {}
+        if self._quant:
+            kw["kv_dtype"] = "int8"
+        return kw
+
     def _ensure_paged_cache(self) -> None:
         if self._paged_cache is None:
-            kw = {"num_state_slots": self.num_state_slots} \
-                if self.state_store is not None else {}
+            kw = self._paged_cache_kwargs()
             shardings = None
             if self.mesh is not None:
                 shardings = self._paged_cache_shardings()

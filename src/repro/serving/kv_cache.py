@@ -416,6 +416,20 @@ class BlockAllocator:
                 self._ref[b] = r - 1
         self._sweep_ttl()
 
+    def sweep(self) -> int:
+        """Expire retained blocks whose TTL has lapsed, *now*.
+
+        ``_sweep_ttl`` only runs inside ``acquire``/``release``, so an
+        idle server — no admissions, no completions — would pin expired
+        prefix blocks and their content-table entries forever.  The
+        engine calls this from ``step()``'s periodic path so wall-clock
+        expiry happens even when no allocation traffic does.  Returns
+        the number of blocks retired by this call.
+        """
+        before = self.n_retain_evictions
+        self._sweep_ttl()
+        return self.n_retain_evictions - before
+
     def _retire_oldest_retained(self) -> None:
         """Move the oldest retained block to the plain free list and
         drop its content-table entry (it is no longer addressable)."""

@@ -20,6 +20,13 @@ scalar, so one compilation serves every burst length — K = 1 and
 K = 8 run the identical compiled loop body, which is what makes burst
 output bit-identical to single-stepping by construction.
 
+The megasteps are **cache-dtype agnostic**: the cache pytree is donated
+and threaded opaquely through ``model.paged_step``, so the int8
+block-quantized pool (``kv_dtype="int8"`` — int8 ``k``/``v`` leaves
+plus f32 ``k_scale``/``v_scale`` scale pools riding the same dict)
+serves through the identical compiled megasteps with no changes here;
+quantize/dequantize live entirely inside the model's attention step.
+
 Slot-state dict contract (all arrays device-resident, donated through
 every megastep call):
 

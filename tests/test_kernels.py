@@ -100,6 +100,64 @@ def test_decode_attention_kernel(B, H, KV, C, hd, length):
                                atol=1e-5, rtol=1e-5)
 
 
+# -- int8 paged decode attention ----------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,hd,nb,bs,P", [
+    (3, 4, 2, 16, 12, 8, 3), (2, 8, 8, 32, 10, 16, 2),
+])
+def test_paged_decode_attention_quant_kernel(B, H, KV, hd, nb, bs, P):
+    """Int8 kernel == dequantize-then-attend oracle (exact), and the
+    int8 round-trip vs the f32 kernel stays within drift tolerance."""
+    from repro.kernels.decode_attention import ops
+    from repro.kernels.decode_attention.ref import (
+        paged_decode_attention_quant_ref)
+    from repro.models.attention import quantize_kv
+    kf = jnp.asarray(rng.standard_normal((nb, bs, KV, hd)), jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((nb, bs, KV, hd)), jnp.float32)
+    kq, ks = quantize_kv(kf)
+    vq, vs = quantize_kv(vf)
+    assert kq.dtype == jnp.int8 and ks.shape == (nb, bs, KV)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    pt = jnp.asarray(np.stack([rng.permutation(nb)[:P] for _ in range(B)]),
+                     jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, P * bs + 1, B), jnp.int32)
+    o = ops.paged_decode_attention_quant_bhd(q, kq, vq, ks, vs, pt, lengths)
+    orf = paged_decode_attention_quant_ref(
+        q[:, 0], jnp.moveaxis(kq, 2, 1), jnp.moveaxis(vq, 2, 1),
+        jnp.moveaxis(ks, 2, 1), jnp.moveaxis(vs, 2, 1), pt, lengths)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(orf),
+                               atol=1e-5, rtol=1e-5)
+    of = ops.paged_decode_attention_bhd(q, kf, vf, pt, lengths)
+    assert float(jnp.max(jnp.abs(o - of))) < 5e-2   # int8 drift, not exact
+
+
+# -- interpret autodetect -----------------------------------------------------
+
+def test_interpret_defaults_to_backend_autodetect():
+    """Every kernels/*/ops.py entry point defaults interpret=None and
+    resolves it through default_interpret(): CPU hosts autodetect to
+    interpret mode (compiled Pallas silently miscompiles or crashes on
+    CPU), explicit overrides pass through untouched."""
+    import inspect
+
+    from repro.kernels import default_interpret
+    from repro.kernels.decode_attention.ops import (
+        decode_attention_bhd, paged_decode_attention_bhd,
+        paged_decode_attention_quant_bhd)
+    from repro.kernels.flash_attention.ops import flash_attention_bshd
+    from repro.kernels.moe_gating.ops import topk
+    from repro.kernels.ssm_scan.ops import selective_scan
+    from repro.kernels.transform.ops import fused_transform
+    for fn in (decode_attention_bhd, paged_decode_attention_bhd,
+               paged_decode_attention_quant_bhd, flash_attention_bshd,
+               topk, selective_scan, fused_transform):
+        sig = inspect.signature(fn)
+        assert sig.parameters["interpret"].default is None, fn.__name__
+    assert default_interpret() == (jax.default_backend() == "cpu")
+    assert default_interpret(True) is True
+    assert default_interpret(False) is False
+
+
 # -- ssm scan -----------------------------------------------------------------------------
 
 @pytest.mark.parametrize("B,S,di,N,bd,ct", [

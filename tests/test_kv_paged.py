@@ -246,6 +246,34 @@ def test_allocator_retain_ttl_expires_by_age():
     assert a.n_free == a.num_blocks
 
 
+def test_allocator_sweep_expires_without_traffic():
+    """Regression: TTL expiry used to piggyback on acquire()/release()
+    only, so an idle allocator kept expired retained blocks (and their
+    content-table entries) pinned forever.  ``sweep()`` must retire them
+    with no allocation traffic at all."""
+    from repro.serving import ROOT_DIGEST
+    now = [0.0]
+    a = BlockAllocator(num_blocks=8, block_size=2, retain_ttl_s=10.0,
+                       clock=lambda: now[0])
+    _retain_n(a, 2)
+    assert a.n_retained == 2 and a.n_table == 2
+    assert a.sweep() == 0              # nothing expired yet: no-op
+    assert a.n_retained == 2
+    now[0] = 11.0                      # both blocks are now 11s old
+    assert a.sweep() == 2              # no acquire/release needed
+    assert a.n_retained == 0 and a.n_table == 0
+    assert a.lookup(ROOT_DIGEST, (0, 1)) is None
+    assert a.n_free == a.num_blocks
+    assert a.sweep() == 0              # idempotent on an empty list
+
+
+def test_allocator_sweep_noop_without_ttl():
+    a = BlockAllocator(num_blocks=4, block_size=2)
+    _retain_n(a, 2)
+    assert a.sweep() == 0              # no TTL configured: retain forever
+    assert a.n_retained == 2
+
+
 def test_allocator_retention_unbounded_by_default():
     a = BlockAllocator(num_blocks=6, block_size=2)
     _retain_n(a, 6)
@@ -631,6 +659,110 @@ def test_blocks_freed_as_each_request_finishes(tiny_model):
     # after the short request finished, only the long one's blocks remain
     assert in_flight_free > 0
     assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def test_engine_idle_step_sweeps_expired_retention(tiny_model):
+    """Regression: an idle server never retired TTL-expired retained
+    blocks.  Expiry was only checked inside acquire()/release(), so with
+    no new traffic the retained set (and its content-table entries)
+    stayed pinned past its TTL indefinitely.  ``ServeEngine.step()``
+    must now sweep on its periodic path even when there is no work."""
+    model, params = tiny_model
+    now = [0.0]
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4, share_prefix=True,
+                      retain_ttl_s=10.0)
+    eng.allocator._clock = lambda: now[0]
+    rng = np.random.default_rng(21)
+    eng.serve([rng.integers(1, TINY.vocab_size, 9).astype(np.int32)])
+    assert eng.allocator.n_retained > 0     # prefix pages were retained
+    assert eng.allocator.n_table > 0
+    now[0] = 11.0                           # past the TTL, server idle
+    assert not eng.has_work
+    assert eng.step() == []                 # pure idle tick
+    assert eng.allocator.n_retained == 0    # ...still sweeps
+    assert eng.allocator.n_table == 0
+    assert eng.allocator.n_free == eng.allocator.num_blocks
+
+
+def _check_pool_invariants(eng):
+    """Accounting identities that must hold at every observable point."""
+    s = eng.pool_stats()
+    for key in ("num_blocks", "n_free", "n_live", "n_shared", "n_private",
+                "n_retained", "n_table", "n_reserved", "bytes_per_block",
+                "pool_bytes"):
+        assert s[key] >= 0, (key, s)
+    assert eng.allocator.n_retain_evictions >= 0
+    # n_free counts retained blocks (they are reclaimable), so the pool
+    # partitions as: plain-free + retained + live == everything
+    assert (s["n_free"] - s["n_retained"]) >= 0, s
+    assert (s["n_free"] - s["n_retained"]) + s["n_retained"] + s["n_live"] \
+        == s["num_blocks"], s
+    assert s["n_private"] == s["n_live"] - s["n_shared"], s
+    assert s["pool_bytes"] == s["bytes_per_block"] * s["num_blocks"], s
+    ls = eng.loop_stats()
+    for k, v in ls.items():
+        if isinstance(v, (int, np.integer)):
+            assert v >= 0, (k, ls)
+
+
+def test_pool_accounting_invariants_under_churn(tiny_model):
+    """Property: through admission, prefix sharing, COW forks, a
+    mid-flight preempt+restore, and final drain, the pool partition
+    (plain-free + retained + live == num_blocks) and every counter stay
+    consistent at each step boundary."""
+    model, params = tiny_model
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=6, block_size=4, prefill_chunk=4,
+                      share_prefix=True)
+    rng = np.random.default_rng(17)
+    shared = rng.integers(1, TINY.vocab_size, 8).astype(np.int32)
+    prompts = [shared,                       # seeds the prefix table
+               np.concatenate([shared, [3]]).astype(np.int32),  # shares+forks
+               rng.integers(1, TINY.vocab_size, 5).astype(np.int32),
+               np.concatenate([shared, [7, 9]]).astype(np.int32)]
+    rids = [eng.submit(p, lane="batch") for p in prompts]
+    _check_pool_invariants(eng)
+    preempted = False
+    steps = 0
+    while eng.has_work:
+        eng.step()
+        steps += 1
+        _check_pool_invariants(eng)
+        if not preempted and steps >= 2:
+            # preempt whichever slot is still running (if any): spills
+            # its pages to the queue-side and must keep the books clean
+            live = [r for r in rids
+                    if any(sl is not None and sl.rid == r
+                           for sl in eng._slots)]
+            if live:
+                eng.preempt(live[-1])
+                preempted = True
+                _check_pool_invariants(eng)
+        assert steps < 400, "engine failed to drain"
+    assert preempted, "churn test never exercised preemption"
+    _check_pool_invariants(eng)
+    s = eng.pool_stats()
+    assert s["n_live"] == 0 and eng._reserved == 0
+    assert s["n_free"] == s["num_blocks"]
+
+
+def test_bytes_per_block_consistent_across_kv_dtypes(tiny_model):
+    """bytes_per_block must track the storage dtype exactly: f32 is 2x
+    bf16, and int8 (values + per-row f32 scales) buys at least the 2x
+    capacity the quantization exists for."""
+    model, params = tiny_model
+    bpb = {}
+    for kv_dtype in (None, "bf16", "int8"):
+        eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                          max_new_tokens=4, block_size=4,
+                          kv_dtype=kv_dtype)
+        s = eng.pool_stats()
+        assert s["bytes_per_block"] == eng.kv_bytes_per_block()
+        bpb[kv_dtype] = s["bytes_per_block"]
+        assert s["kv_dtype"] == ("f32" if kv_dtype is None else kv_dtype)
+    assert bpb[None] == 2 * bpb["bf16"]
+    assert bpb[None] >= 2 * bpb["int8"]
 
 
 def test_cache_full_request_stays_queued(family_model):

@@ -1,0 +1,145 @@
+"""Int8 paged-KV quantization: drift contract + engine gates.
+
+The contract (see docs/serving.md):
+
+  * ``kv_dtype=None`` vs ``kv_dtype="f32"`` — **bitwise identical**: the
+    quant path is a separate sibling dispatch keyed on the cache
+    pytree's ``k_scale`` leaf, so unquantized serving runs byte-for-byte
+    the same code as before the feature existed.
+  * ``kv_dtype="int8"`` — bitwise identity is explicitly NOT the
+    contract.  The contract is *bounded drift*: per-family max |Δlogit|
+    on the prompt-conditioned (first) decode step, plus greedy
+    token-level agreement with the f32 engine.
+  * Families with no attention layers store nothing in the quantized
+    pools, so their int8 run IS bitwise identical — asserted as such.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import TINY_SERVE
+from repro.serving import ServeEngine
+
+# prompt-conditioned logit drift ceilings, measured on the tiny serve
+# configs and padded ~5x; attention-free stacks must be exact
+MAX_FIRST_STEP_DRIFT = {
+    "transformer": 0.15,
+    "hybrid": 0.15,
+    "mamba": 0.0,
+    "xlstm": 0.0,
+}
+# fraction of greedily-decoded tokens that must agree with f32
+MIN_TOKEN_AGREEMENT = 0.6
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.models import build_model
+    model = build_model(TINY_SERVE)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _serve_traced(model, params, prompts, kv_dtype, max_new=6):
+    eng = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=max_new, block_size=4, prefill_chunk=4,
+                      trace_logits=True, kv_dtype=kv_dtype)
+    res = eng.serve(prompts)
+    return eng, {r.request_id: list(r.tokens) for r in res}
+
+
+@pytest.fixture(scope="module")
+def quant_prompts():
+    rng = np.random.default_rng(29)
+    return [rng.integers(1, TINY_SERVE.vocab_size, n).astype(np.int32)
+            for n in (5, 9, 3, 12)]
+
+
+def test_int8_drift_bounded_per_family(family_model, quant_prompts):
+    family, model, params = family_model
+    ref_eng, ref_toks = _serve_traced(model, params, quant_prompts, None)
+    q_eng, q_toks = _serve_traced(model, params, quant_prompts, "int8")
+    assert set(q_toks) == set(ref_toks)
+    tol = MAX_FIRST_STEP_DRIFT[family]
+    agree = total = 0
+    for rid, ref_trace in ref_eng.logit_trace.items():
+        q_trace = q_eng.logit_trace[rid]
+        # step 0 is conditioned on the prompt alone — no divergence
+        # feedback — so its drift isolates the quantization error
+        d0 = float(jnp.max(jnp.abs(q_trace[0].astype(jnp.float32)
+                                   - ref_trace[0].astype(jnp.float32))))
+        if tol == 0.0:
+            assert d0 == 0.0, (family, rid, d0)
+        else:
+            assert d0 <= tol, (family, rid, d0)
+        for a, b in zip(q_toks[rid], ref_toks[rid]):
+            total += 1
+            agree += int(a == b)
+    assert total > 0
+    if tol == 0.0:                     # attention-free: exact tokens
+        assert agree == total, family
+    else:
+        assert agree / total >= MIN_TOKEN_AGREEMENT, \
+            (family, f"{agree}/{total} greedy tokens agree")
+
+
+def test_f32_mode_bitwise_identical_to_default(tiny_model, quant_prompts):
+    """kv_dtype='f32' must be a pure alias for the default path — the
+    quant dispatch keys on cache structure, so the traces are bitwise
+    equal, not merely close."""
+    model, params = tiny_model
+    a_eng, a_toks = _serve_traced(model, params, quant_prompts, None)
+    b_eng, b_toks = _serve_traced(model, params, quant_prompts, "f32")
+    assert a_toks == b_toks
+    for rid, trace in a_eng.logit_trace.items():
+        for s, (x, y) in enumerate(zip(trace, b_eng.logit_trace[rid])):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (rid, s)
+
+
+def test_int8_cache_structure(tiny_model):
+    """The int8 pool stores int8 K/V plus per-(block, row, head) f32
+    scales; the f32 pool has no scale leaves at all."""
+    model, params = tiny_model
+    nb, bs = 6, 4
+    cache = model.init_paged_cache(nb, bs, dtype=jnp.float32,
+                                   kv_dtype="int8")
+    leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+
+    def by_name(name):
+        return [l for p, l in leaves
+                if any(isinstance(k, jax.tree_util.DictKey) and k.key == name
+                       for k in p)]
+
+    ks, scales = by_name("k"), by_name("k_scale")
+    assert ks and scales and len(ks) == len(scales)
+    for k, s in zip(ks, scales):
+        assert k.dtype == jnp.int8
+        assert s.dtype == jnp.float32
+        assert s.shape == k.shape[:-1]   # head_dim reduced away
+    plain = model.init_paged_cache(nb, bs, dtype=jnp.float32)
+    plain_leaves = jax.tree_util.tree_flatten_with_path(plain)[0]
+    assert not [l for p, l in plain_leaves
+                if any(isinstance(k, jax.tree_util.DictKey)
+                       and k.key.endswith("_scale") for k in p)]
+
+
+def test_int8_capacity_at_least_doubles(tiny_model):
+    """The point of the feature: at equal pool bytes, int8 must fit at
+    least 2x the blocks f32 does."""
+    model, params = tiny_model
+    f32 = ServeEngine(model, params, batch_size=2, capacity=32,
+                      max_new_tokens=4, block_size=4)
+    q = ServeEngine(model, params, batch_size=2, capacity=32,
+                    max_new_tokens=4, block_size=4, kv_dtype="int8")
+    assert f32.kv_bytes_per_block() >= 2 * q.kv_bytes_per_block()
+    assert q.pool_stats()["kv_dtype"] == "int8"
+
+
+def test_engine_gates_unsupported_combos(tiny_model):
+    model, params = tiny_model
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeEngine(model, params, kv_dtype="fp4")
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, kv_dtype="int8", paged=False)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(model, params, kv_dtype="int8", spec_k=2)
