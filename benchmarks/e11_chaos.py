@@ -1,0 +1,172 @@
+"""E11 — goodput under injected faults (the chaos benchmark).
+
+The same loopback tensor-query stack as E7 (paged ServeEngine behind
+serversrc ! batcher ! queue ! engine-filter ! unbatcher ! serversink)
+is driven twice with an identical open-loop Poisson workload:
+
+  * **clean** — no fault plan: the baseline goodput / p99 TTFT;
+  * **chaos** — a :class:`FaultPlan` poisons ~10% of submitted rows
+    (``submit`` seam), injects two non-attributable engine step
+    failures (``engine_step`` seam → bounded restart: survivors spill
+    and re-admit), and the client cancels ~5% of its own queries
+    mid-flight.
+
+The headline is *graceful degradation*: under chaos every single
+request still reaches a terminal status (ok / error / cancelled —
+nothing hangs, the server never dies), the pool balances afterwards
+(``n_free + n_live == num_blocks``), and goodput stays within the same
+order as clean — the faults cost their own requests, not the system.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+BATCH_SLOTS = 4
+MAX_NEW = 32
+PROMPT_LEN = 12
+CAPACITY = 48
+LOAD_S = 8.0               # open-loop window per phase
+RATE = 30.0                # Poisson arrivals / s
+FAULT_EVERY = 10           # poison every 10th submitted row (~10%)
+CANCEL_EVERY = 20          # client cancels every 20th query (~5%)
+
+
+def _cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(
+        arch_id="e11-tiny", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+        norm="rmsnorm", mlp_act="swiglu", rope="rope",
+        param_dtype="float32", compute_dtype="float32")
+
+
+def _percentile_us(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q) * 1e6)
+
+
+def _phase(model, params, cfg, plan, cancel_every=0):
+    """One open-loop run; returns (results, wall_s, engine, server)."""
+    from repro.serving import (ServeEngine, TensorQueryClient,
+                               TensorQueryServer)
+    eng = ServeEngine(model, params, batch_size=BATCH_SLOTS,
+                      capacity=CAPACITY, max_new_tokens=MAX_NEW,
+                      block_size=8, prefill_chunk=16, fault_plan=plan)
+    server = TensorQueryServer(eng, max_wait_ms=4.0, pad_to=PROMPT_LEN,
+                               workers=4, fault_plan=plan).start()
+    try:
+        warm = TensorQueryClient("127.0.0.1", server.port)
+        wq = warm.submit(np.arange(1, PROMPT_LEN + 1, dtype=np.int32))
+        warm.result(wq, timeout=120)   # compile prefill/decode paths
+        warm.close()
+
+        cli = TensorQueryClient("127.0.0.1", server.port)
+        rng = np.random.default_rng(0)
+        gaps = list(rng.exponential(1.0 / RATE, max(1, int(LOAD_S * RATE))))
+        prompt_rng = np.random.default_rng(1)
+        qids: List[int] = []
+        cancelled: List[int] = []
+
+        def submit_loop():
+            t_next = time.monotonic()
+            for i, gap in enumerate(gaps):
+                t_next += gap
+                lag = t_next - time.monotonic()
+                if lag > 0:
+                    time.sleep(lag)
+                prompt = prompt_rng.integers(
+                    1, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+                qid = cli.submit(prompt)
+                qids.append(qid)
+                if cancel_every and (i + 1) % cancel_every == 0:
+                    cli.cancel(qid)
+                    cancelled.append(qid)
+
+        t0 = time.perf_counter()
+        th = threading.Thread(target=submit_loop)
+        th.start()
+        th.join()
+        results = [cli.result(q, timeout=300) for q in qids]
+        wall = time.perf_counter() - t0
+        cli.close()
+        pool = eng.pool_stats()
+        # accounting audit: the storm must not leak a single block/route
+        assert pool["n_free"] + pool["n_live"] == pool["num_blocks"], pool
+        assert pool["n_reserved"] == 0, pool
+        counters = {"restarts": eng.n_restarts,
+                    "step_failures": eng.n_step_failures,
+                    "cancelled": eng.n_cancelled,
+                    "overrun_kills": server.n_overrun_kills,
+                    "n_cancel_frames": len(cancelled)}
+    finally:
+        server.stop()
+    return results, wall, counters
+
+
+def run():
+    import jax
+    from repro.models import build_model
+    from repro.serving import Fault, FaultPlan
+
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def summarize(results, wall):
+        ok = [r for r in results if r.status == "ok"]
+        ttft = [r.ttft_s for r in ok if r.ttft_s is not None]
+        toks = sum(len(r.tokens) for r in ok)
+        return ok, ttft, toks / wall
+
+    # -- clean baseline ----------------------------------------------------
+    clean_res, clean_wall, _ = _phase(model, params, cfg, plan=None)
+    assert all(r.status == "ok" for r in clean_res), \
+        [r.status for r in clean_res if r.status != "ok"]
+    ok_c, ttft_c, goodput_c = summarize(clean_res, clean_wall)
+
+    # -- chaos: ~10% poisoned rows, 2 engine restarts, ~5% client cancels --
+    plan = FaultPlan([
+        Fault(point="submit", every=FAULT_EVERY, msg="chaos poison row"),
+        Fault(point="engine_step", nth=50, msg="chaos step fault 1"),
+        Fault(point="engine_step", nth=200, msg="chaos step fault 2"),
+    ])
+    chaos_res, chaos_wall, counters = _phase(model, params, cfg, plan,
+                                             cancel_every=CANCEL_EVERY)
+    # graceful degradation: every request is terminal, nothing hangs
+    statuses = [r.status for r in chaos_res]
+    assert all(s in ("ok", "error", "cancelled", "timeout", "oom")
+               for s in statuses), set(statuses)
+    n_err = statuses.count("error")
+    n_cancel = statuses.count("cancelled")
+    assert n_err >= 1, "fault plan never fired"
+    ok_x, ttft_x, goodput_x = summarize(chaos_res, chaos_wall)
+    # the faults cost their own requests, not the system: the healthy
+    # majority still completes and throughput stays the same order
+    assert len(ok_x) >= 0.5 * len(chaos_res), \
+        f"only {len(ok_x)}/{len(chaos_res)} survived the chaos phase"
+    assert goodput_x > 0.2 * goodput_c, \
+        f"goodput collapsed under faults: {goodput_x:.1f} vs {goodput_c:.1f}"
+
+    yield (f"e11_clean_ttft_p99,{_percentile_us(ttft_c, 99):.1f},"
+           f"p50={_percentile_us(ttft_c, 50) / 1e3:.1f}ms "
+           f"n={len(ok_c)}/{len(clean_res)} ok")
+    yield (f"e11_clean_goodput,0.0,{goodput_c:.1f} tok/s over "
+           f"{clean_wall:.1f}s clean window")
+    yield (f"e11_chaos_ttft_p99,{_percentile_us(ttft_x, 99):.1f},"
+           f"p50={_percentile_us(ttft_x, 50) / 1e3:.1f}ms "
+           f"n={len(ok_x)}/{len(chaos_res)} ok")
+    yield (f"e11_chaos_goodput,0.0,{goodput_x:.1f} tok/s under "
+           f"~{100 // FAULT_EVERY}% fault rate "
+           f"({goodput_x / goodput_c:.0%} of clean)")
+    yield (f"e11_chaos_faults,0.0,fired={plan.n_fired} errors={n_err} "
+           f"cancelled={n_cancel} restarts={counters['restarts']} "
+           f"step_failures={counters['step_failures']} "
+           f"engine_cancels={counters['cancelled']}")
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -19,7 +19,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: e1,e2,e3,e4,e5,e6,e7,e8,e9,"
-                         "e10_quant,roofline")
+                         "e10_quant,e11_chaos,roofline")
     ap.add_argument("--json", default=None,
                     help="write rows as machine-readable JSON here "
                          "(default: BENCH_serving.json on full runs; "
@@ -33,12 +33,13 @@ def main() -> None:
 
     from . import (e1_multimodel, e2_ars, e3_mtcnn, e4_overhead, e5_batching,
                    e6_decode_loop, e7_frontdoor, e8_sharded, e9_speculative,
-                   e10_quant, roofline)
+                   e10_quant, e11_chaos, roofline)
     sections = [("e1", e1_multimodel), ("e2", e2_ars), ("e3", e3_mtcnn),
                 ("e4", e4_overhead), ("e5", e5_batching),
                 ("e6", e6_decode_loop), ("e7", e7_frontdoor),
                 ("e8", e8_sharded), ("e9", e9_speculative),
-                ("e10_quant", e10_quant), ("roofline", roofline)]
+                ("e10_quant", e10_quant), ("e11_chaos", e11_chaos),
+                ("roofline", roofline)]
     print("name,us_per_call,derived")
     failed = False
     report = {"sections": {}, "rows": []}

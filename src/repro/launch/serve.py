@@ -13,6 +13,7 @@ through the continuous-batching ServeEngine mounted as a
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -116,6 +117,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-wait-ms-net", type=float, default=5.0,
                     help="--listen: micro-batch window of the server-side "
                          "tensor_batcher")
+    ap.add_argument("--drain-timeout-s", type=float, default=30.0,
+                    help="--listen (standing server): on SIGTERM/SIGINT, "
+                         "stop admitting and give in-flight requests this "
+                         "long to finish before cancelling them; every "
+                         "client gets a terminal frame and the process "
+                         "exits 0")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="serve tensor-parallel over the first N devices "
                          "(a (1, N) data×model mesh; paged mode only). "
@@ -282,8 +289,26 @@ def main():
               f"(lanes: {', '.join(lanes)})")
         try:
             if not args.smoke:
-                while True:            # serve until interrupted
-                    time.sleep(1.0)
+                # standing server: SIGTERM/SIGINT triggers a graceful
+                # drain — stop admitting, finish (or cancel) in-flight
+                # work so every client holds a terminal frame, exit 0
+                import signal
+                stop_evt = threading.Event()
+
+                def _on_signal(signum, frame):
+                    del frame
+                    print(f"signal {signum}: draining "
+                          f"(timeout {args.drain_timeout_s:.0f}s)",
+                          flush=True)
+                    stop_evt.set()
+                signal.signal(signal.SIGTERM, _on_signal)
+                signal.signal(signal.SIGINT, _on_signal)
+                while not stop_evt.wait(timeout=0.2):
+                    pass
+                clean = server.drain(timeout=args.drain_timeout_s)
+                print("drain complete" if clean
+                      else "drain timed out: remaining requests cancelled",
+                      flush=True)
                 return
             t0 = time.perf_counter()
             client = TensorQueryClient("127.0.0.1", server.port)

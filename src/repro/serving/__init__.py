@@ -1,4 +1,5 @@
 from .engine import ServeEngine, GenerationResult
+from .faults import Fault, FaultPlan
 from .kv_cache import (BlockAllocator, CacheFullError, DeviceSlotState,
                        ROOT_DIGEST, SPEC_STATE_KEYS, StateStore, chain_digest,
                        paged_gather, paged_scatter)
@@ -10,7 +11,8 @@ from .steps import (logits_to_probs, make_prefill_step, make_decode_step,
                     make_sampler_core, make_slot_sampler, sample_logits,
                     spec_accept)
 
-__all__ = ["ServeEngine", "GenerationResult", "BlockAllocator",
+__all__ = ["ServeEngine", "GenerationResult", "Fault", "FaultPlan",
+           "BlockAllocator",
            "CacheFullError", "DeviceSlotState", "ROOT_DIGEST",
            "SPEC_STATE_KEYS", "StateStore",
            "chain_digest", "paged_gather", "paged_scatter",

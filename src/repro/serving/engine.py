@@ -119,10 +119,12 @@ class GenerationResult:
     prompt: np.ndarray
     tokens: np.ndarray
     latency_s: float
-    # "ok" | "timeout" | "expired" | "cancelled" — non-ok results carry
-    # whatever tokens were generated before the request was failed
+    # "ok" | "timeout" | "expired" | "cancelled" | "overrun" | "error" —
+    # non-ok results carry whatever tokens were generated before the
+    # request was failed
     status: str = "ok"
     ttft_s: Optional[float] = None    # submit -> first generated token
+    error: Optional[str] = None       # failure message (status "error")
 
 
 class _Slot:
@@ -194,7 +196,8 @@ class ServeEngine:
                  mesh=None, retain_cap: Optional[int] = None,
                  retain_ttl_s: Optional[float] = None,
                  draft_model=None, draft_params=None, spec_k: int = 0,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 fault_plan=None, max_restarts: int = 3):
         self.model = model
         self.params = params
         self.batch_size = batch_size
@@ -541,6 +544,15 @@ class ServeEngine:
         # per-round accepted-length histogram: bin a counts rounds that
         # accepted exactly a draft tokens (a in [0, spec_k])
         self.spec_accept_hist = [0] * (self.spec_k + 1) if self._spec else []
+        # fault tolerance: injectable fault plan (serving.faults, duck-
+        # typed so None costs one check) + bounded-restart accounting for
+        # non-attributable step failures
+        self.fault_plan = fault_plan
+        self.max_restarts = int(max_restarts)
+        self.n_step_failures = 0      # step() exceptions caught
+        self.n_restarts = 0           # engine pool rebuilds performed
+        self.n_cancelled = 0          # requests cancelled via cancel()
+        self._consec_failures = 0     # resets on every clean step
 
     # -- synchronous fixed batch API (kept for benchmarks/back-compat) ------
     def generate_batch(self, prompts: np.ndarray,
@@ -590,6 +602,15 @@ class ServeEngine:
             raise ValueError(
                 f"prompt length {prompt.shape[0]} exceeds KV-cache capacity "
                 f"{self.capacity}; raise capacity= or truncate the prompt")
+        # vocab validation at the gate: an out-of-range token would index
+        # past the embedding table inside a jitted megastep, which can
+        # poison a whole batch — reject it before it ever owns a slot
+        vocab = getattr(getattr(self.model, "cfg", None), "vocab_size", None)
+        if vocab is not None and (int(prompt.min()) < 0
+                                  or int(prompt.max()) >= int(vocab)):
+            raise ValueError(
+                f"prompt tokens outside the model vocab [0, {vocab}) "
+                f"(min {int(prompt.min())}, max {int(prompt.max())})")
         now = time.monotonic()
         with self._lock:
             rid = self._next_rid
@@ -738,9 +759,140 @@ class ServeEngine:
         prefill+decode megastep), evict what finished.
 
         Returns results for requests that completed during this step.
+
+        A step exception is *non-attributable* — there is no way to
+        know which resident request poisoned the megastep — so the
+        engine restarts: live slots are spilled to host and re-queued
+        (the PR 6 preemption path, bit-identical on restore), the
+        device pools and allocator are rebuilt, and serving continues.
+        Restarts are bounded by ``max_restarts`` *consecutive*
+        failures; past that every in-flight and queued request is
+        failed and the exception propagates.
         """
-        with self._sharding_ctx():
-            return self._step_impl()
+        fault = self.fault_plan.fire("engine_step") if self.fault_plan \
+            else None
+        try:
+            if fault is not None and fault.action == "raise":
+                raise fault.make_exc()
+            with self._sharding_ctx():
+                out = self._step_impl()
+        except Exception as exc:
+            return self._handle_step_failure(exc)
+        self._consec_failures = 0
+        return out
+
+    def _handle_step_failure(self, exc: Exception) -> List[GenerationResult]:
+        """Recover from a non-attributable step exception: bounded
+        restart (spill survivors, rebuild pools) or — past the budget —
+        fail everything and re-raise."""
+        self.n_step_failures += 1
+        self._consec_failures += 1
+        if self._consec_failures > self.max_restarts:
+            now = time.monotonic()
+            msg = f"engine wedged after {self.n_restarts} restarts: {exc}"
+            with self._lock:
+                queued = []
+                for req in list(self.scheduler.candidates()):
+                    self.scheduler.remove(req)
+                    queued.append(req)
+            for req in queued:
+                self._finish(GenerationResult(
+                    request_id=req.rid, prompt=req.prompt,
+                    tokens=np.asarray(req.tokens, np.int32),
+                    latency_s=now - req.t_submit, status="error", error=msg))
+            for i, slot in enumerate(self._slots):
+                if slot is None:
+                    continue
+                self._finish(GenerationResult(
+                    request_id=slot.rid, prompt=slot.prompt,
+                    tokens=np.asarray(slot.tokens, np.int32),
+                    latency_s=now - slot.t_submit, status="error", error=msg))
+                self._slots[i] = None
+            self._reset_pools()        # nothing leaks even in death
+            raise exc
+        self.n_restarts += 1
+        self._restart()
+        return []
+
+    def _restart(self) -> None:
+        """Rebuild the serving pools after a step failure.
+
+        Paged mode: every live slot is spilled via the preemption path
+        (decode slots gather their pages/slab to host; mid-prefill
+        slots simply restart) and re-queued at its lane's front, then
+        the device caches, allocator, and state store are rebuilt from
+        scratch — donation means the old cache arrays may already be
+        deleted, and the content table would advertise garbage over a
+        fresh pool either way.  A slot whose spill itself fails (e.g.
+        its pages lived in a donated-away buffer) is failed alone with
+        status ``"error"``.  Dense mode has no spill path: in-flight
+        slots are failed, queued work survives untouched."""
+        now = time.monotonic()
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            spilled = False
+            if self.paged and not slot.done:
+                try:
+                    with self._sharding_ctx():
+                        self._preempt_slot(i)
+                    spilled = True
+                except Exception:
+                    pass               # unsalvageable: fail it below
+            if not spilled:
+                self._finish(GenerationResult(
+                    request_id=slot.rid, prompt=slot.prompt,
+                    tokens=np.asarray(slot.tokens, np.int32),
+                    latency_s=now - slot.t_submit, status="error",
+                    error="lost in engine restart"))
+            self._slots[i] = None
+        self._reset_pools()
+
+    def _reset_pools(self) -> None:
+        """Rebuild device caches + host accounting from scratch (all
+        slots must already be empty)."""
+        if self.paged:
+            old = self.allocator
+            self.allocator = BlockAllocator(
+                old.num_blocks, old.block_size,
+                retain_cap=old.retain_cap, retain_ttl_s=old.retain_ttl_s)
+            if self.state_store is not None:
+                self.state_store = StateStore(self.num_state_slots)
+            self._paged_cache = None
+            self._draft_cache = None
+        else:
+            self._cache = None
+            self._pos = 0
+        self._reserved = 0
+        self._page_table[:, :] = 0
+        self._lengths[:] = 0
+        self._state_slots[:] = 0
+        self._dev.mark_dirty()
+
+    def cancel(self, rid: int, status: str = "cancelled") -> bool:
+        """Cancel one request wherever it is — queued, mid-prefill, or
+        mid-decode-burst (the drained ring is replayed up to the cancel
+        point, so its result carries every token generated before the
+        cancel landed).  Its blocks, state slab, and any retained
+        content-table registrations are freed.  Returns True if the
+        request was live and is now terminal with ``status``; False if
+        it was unknown or already finished (the existing result is left
+        for its waiter)."""
+        with self._results_cv:
+            if rid in self._results:
+                return False
+        self._cancel([rid], status)
+        with self._results_cv:
+            done = rid in self._results
+        if done:
+            self.n_cancelled += 1
+        return done
+
+    def inflight_rids(self) -> List[int]:
+        """Rids with no result yet: queued plus resident in a slot."""
+        with self._lock:
+            queued = [req.rid for req in self.scheduler.candidates()]
+        return queued + [s.rid for s in self._slots if s is not None]
 
     def _step_impl(self) -> List[GenerationResult]:
         if self.paged:
@@ -835,13 +987,22 @@ class ServeEngine:
                     tokens=np.asarray(req.tokens, np.int32),
                     latency_s=now - req.t_submit, status=status))
             dirty = False
+            dead_blocks: List[int] = []
             for slot in self._slots:
                 if slot is not None and slot.rid in rids:
                     slot.status = status
                     slot.done = True
+                    if self.paged:
+                        dead_blocks += list(slot.blocks)
                     dirty = True
             if dirty:
                 self._evict_paged() if self.paged else self._evict()
+                # a cancelled request's pages must not linger as
+                # retained prefix bait: retire any of its blocks that
+                # eviction parked on the retained list (blocks still
+                # shared with a live slot are untouched)
+                for b in dead_blocks:
+                    self.allocator.retire(b)
 
     def as_pipeline_filter(self, *, use_meta: bool = False,
                            on_submit=None, timeout_s: Optional[float] = None):
@@ -866,30 +1027,67 @@ class ServeEngine:
             prompts = np.asarray(prompts, np.int32)
             ms = list(metas) if (use_meta and metas is not None) \
                 else [None] * len(prompts)
-            rids = []
+            rids: List[Optional[int]] = []
             for row, m in zip(prompts, ms):
                 q = m.get("query", {}) if isinstance(m, dict) else {}
                 plen = int(q.get("prompt_len", 0)) or row.shape[0]
-                rid = self.submit(row[row.shape[0] - plen:],
-                                  lane=q.get("lane", "interactive"),
-                                  deadline=q.get("deadline"),
-                                  tag=q.get("tag"))
+                # per-row isolation: a poison prompt (bad shape, vocab
+                # overflow, injected "submit" fault) fails only its own
+                # row — the rest of the batch is served normally
+                try:
+                    f = self.fault_plan.fire("submit") if self.fault_plan \
+                        else None
+                    if f is not None and f.action == "raise":
+                        raise f.make_exc()
+                    rid = self.submit(row[row.shape[0] - plen:],
+                                      lane=q.get("lane", "interactive"),
+                                      deadline=q.get("deadline"),
+                                      tag=q.get("tag"))
+                except Exception as exc:
+                    rids.append(None)
+                    if isinstance(m, dict):
+                        m.update(status="error", error=str(exc), n_tokens=0)
+                    continue
                 rids.append(rid)
                 if isinstance(m, dict):
                     m["rid"] = rid
                 if on_submit is not None:
                     on_submit(rid, m)
-            results = self.wait(rids, timeout_s=timeout_s)
+            live = [r for r in rids if r is not None]
+            err = None
+            try:
+                f = self.fault_plan.fire("worker") if self.fault_plan \
+                    else None
+                if f is not None and f.action == "raise":
+                    raise f.make_exc()
+                results = self.wait(live, timeout_s=timeout_s)
+            except Exception as exc:
+                # worker-level failure after submission: fail exactly
+                # this batch's requests (with a clean two-pool free) and
+                # surface the message — other workers' requests and the
+                # engine itself keep going
+                err = str(exc)
+                self._cancel(live, "error")
+                with self._results_cv:
+                    results = [self._results.pop(r) for r in live
+                               if r in self._results]
             by_id = {r.request_id: r for r in results}
             out = np.full((len(rids), self.max_new_tokens), pad, np.int32)
             for i, rid in enumerate(rids):
+                if rid is None:
+                    continue          # failed at submit; meta already set
                 r = by_id.get(rid)
                 if r is None:
+                    if isinstance(ms[i], dict):
+                        ms[i].update(status="error", n_tokens=0,
+                                     error=err or "request lost")
                     continue
                 out[i, : len(r.tokens)] = r.tokens
                 if isinstance(ms[i], dict):
                     ms[i].update(status=r.status, ttft_s=r.ttft_s,
                                  n_tokens=int(len(r.tokens)))
+                    if r.status == "error":
+                        ms[i]["error"] = r.error or err or "request failed"
             return out
         return fn
 
@@ -1447,8 +1645,24 @@ class ServeEngine:
                     if req.lane == "interactive":
                         blocked_interactive = True
                     break
-                fit = self._restore_fit(req, free) if req.preempted \
-                    else self._fresh_fit(req, free)
+                try:
+                    fit = self._restore_fit(req, free) if req.preempted \
+                        else self._fresh_fit(req, free)
+                except CacheFullError:
+                    # transient allocator storm (real or injected): the
+                    # candidate stays queued, never oom-failed
+                    continue
+                except Exception as exc:
+                    # attributable to this candidate alone: fail it,
+                    # keep scanning — one bad request must not block
+                    # the queue or poison its neighbours
+                    self.scheduler.remove(req)
+                    self._finish(GenerationResult(
+                        request_id=req.rid, prompt=req.prompt,
+                        tokens=np.asarray(req.tokens, np.int32),
+                        latency_s=time.monotonic() - req.t_submit,
+                        status="error", error=f"admission failed: {exc}"))
+                    continue
                 if fit is None:
                     if self.allocator.n_live == 0 and self._reserved == 0 \
                             and (self.state_store is None
@@ -1481,6 +1695,9 @@ class ServeEngine:
     def _fresh_fit(self, req: SchedRequest, free: List[int]):
         """Try to take resources for a fresh admission (all-or-nothing);
         None if the request does not fit right now."""
+        f = self.fault_plan.fire("admit") if self.fault_plan else None
+        if f is not None and f.action == "raise":
+            raise f.make_exc()         # before anything is taken
         plen = req.prompt.shape[0]
         mapped, digests, matched = self._match_prefix_cached(req)
         total = self.allocator.blocks_for(

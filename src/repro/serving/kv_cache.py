@@ -430,6 +430,33 @@ class BlockAllocator:
         self._sweep_ttl()
         return self.n_retain_evictions - before
 
+    def retire(self, block: int) -> bool:
+        """Retire one *specific* retained block: drop its content-table
+        entry and move it to the plain free list.  Used when a block's
+        resident KV is known to be garbage (e.g. its request was
+        cancelled mid-page or the pool was rebuilt) so a future prefix
+        hit can never map stale content.  Returns True if the block was
+        retained (and is now plain-free); no-op False otherwise."""
+        if block not in self._retained:
+            return False
+        del self._retained[block]
+        self._unregister(block)
+        self._free.append(block)
+        self.n_retain_evictions += 1
+        return True
+
+    def clear_registry(self) -> None:
+        """Forget every content-table entry and retire all retained
+        blocks to the plain free list.  Called on engine restart: the
+        device pool was reinitialised, so every registered block now
+        advertises KV that no longer exists."""
+        while self._retained:
+            self._retire_oldest_retained()
+        # live blocks may also be registered; their entries are equally
+        # stale after a pool rebuild
+        for b in list(self._key_of):
+            self._unregister(b)
+
     def _retire_oldest_retained(self) -> None:
         """Move the oldest retained block to the plain free list and
         drop its content-table entry (it is no longer addressable)."""

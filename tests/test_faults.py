@@ -1,0 +1,695 @@
+"""Chaos suite: fault-injected serving must degrade request-by-request.
+
+Every scenario threads a :class:`FaultPlan` through the serving seams
+(``server_send``, ``engine_step``, ``admit``, ``worker``, ``submit``)
+and asserts the blast radius of each injected failure: exactly the
+affected requests reach a terminal frame with the right status, the
+server keeps accepting and answering, and the block pool's invariant
+
+    ``n_free + n_live == num_blocks`` and ``n_reserved == 0``
+
+holds once the dust settles — nothing leaks, nothing wedges.
+
+Network scenarios run the deterministic ToyModel (closed-form expected
+tokens); pool-accounting scenarios run the tiny paged transformer so
+real block/slab accounting is exercised.  The frame-parser fuzz tests
+degrade to deterministic examples when hypothesis is not installed
+(same pattern as test_kv_paged).
+"""
+import contextlib
+import importlib.util
+import socket
+import struct
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.elements.query import (CONN_QID, HDR, MAGIC, MAX_PAYLOAD,
+                                       MSG_CANCEL, MSG_DONE, MSG_ERROR,
+                                       MSG_REQUEST, MSG_TOKENS,
+                                       ProtocolError, QueryConnection,
+                                       STATUS_CODES, STATUS_NAMES, VERSION,
+                                       pack_frame, pack_tensor, read_frame,
+                                       unpack_tensor)
+from repro.models import build_model
+from repro.serving import (CacheFullError, Fault, FaultPlan, ServeEngine,
+                           TensorQueryClient, TensorQueryServer)
+
+from test_kv_paged import TINY, _fresh_dense_tokens
+from test_serve_continuous import ToyModel, _expected
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _wait_until(cond, timeout=10.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(0.01)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+def _assert_pool_clean(eng):
+    """The acceptance invariant: after a drained workload no block is
+    leaked (free incl. retained + live == pool) and no reservation is
+    left dangling."""
+    stats = eng.pool_stats()
+    if stats is None:                       # dense engine: no pool
+        return
+    assert stats["n_free"] + stats["n_live"] == stats["num_blocks"], stats
+    assert stats["n_reserved"] == 0, stats
+
+
+def _run(eng, timeout=60.0):
+    out = []
+    deadline = time.monotonic() + timeout
+    while eng.has_work and time.monotonic() < deadline:
+        out.extend(eng.step())
+    assert not eng.has_work, "engine did not drain in time"
+    return out
+
+
+@contextlib.contextmanager
+def _toy_server(plan=None, *, max_new=6, pause_limit=64, batch_size=4,
+                workers=4):
+    eng = ServeEngine(ToyModel(), params={}, batch_size=batch_size,
+                      capacity=16 + max_new + 2, max_new_tokens=max_new,
+                      fault_plan=plan)
+    srv = TensorQueryServer(eng, max_wait_ms=5.0, pad_to=16, workers=workers,
+                            pause_limit=pause_limit, fault_plan=plan).start()
+    try:
+        yield eng, srv
+    finally:
+        srv.stop()
+
+
+def _paged_engine(model, params, plan=None, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("capacity", 32)
+    kw.setdefault("max_new_tokens", 4)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 8)
+    kw.setdefault("prefill_chunk", 16)
+    return ServeEngine(model, params, fault_plan=plan, **kw)
+
+
+def _rng_prompt(rng, n):
+    return rng.integers(1, TINY.vocab_size, n).astype(np.int32)
+
+
+# =====================================================================
+# credit flow control: unit level (socketpair, no engine)
+# =====================================================================
+
+@contextlib.contextmanager
+def _conn_pair(**kw):
+    a, b = socket.socketpair()
+    conn = QueryConnection(a, ("unit", 0), **kw)
+    try:
+        yield conn, b
+    finally:
+        conn.close()
+        b.close()
+
+
+def _tok(v):
+    return pack_tensor(np.asarray([v], np.int32))
+
+
+def test_credit_pauses_at_zero_and_grant_flushes_in_order():
+    with _conn_pair() as (conn, peer):
+        conn.grant_credit(5, 1)                       # credited route, 1 frame
+        assert conn.send_tokens(5, _tok(10)) is True
+        assert conn.send_tokens(5, _tok(11)) == "paused"
+        assert conn.send_tokens(5, _tok(12)) == "paused"
+        assert conn.n_paused_for(5) == 2
+        assert conn.n_dropped == 0                    # paused, never dropped
+        conn.grant_credit(5, 10)
+        assert conn.n_paused_for(5) == 0
+        got = [unpack_tensor(read_frame(peer)[5])[0] for _ in range(3)]
+        assert got == [10, 11, 12]                    # order preserved
+
+
+def test_credit_pause_buffer_overflow_reports_overrun():
+    with _conn_pair(pause_limit=2) as (conn, peer):
+        conn.grant_credit(7, 0)                       # credited, zero credit
+        assert conn.send_tokens(7, _tok(1)) == "paused"
+        assert conn.send_tokens(7, _tok(2)) == "paused"
+        assert conn.send_tokens(7, _tok(3)) == "overrun"
+        assert conn.n_overruns == 1
+        assert conn.n_paused_for(7) == 2              # buffer kept, not grown
+
+
+def test_terminal_done_flushes_paused_tokens_ahead_of_itself():
+    with _conn_pair() as (conn, peer):
+        conn.grant_credit(3, 0)
+        assert conn.send_tokens(3, _tok(40)) == "paused"
+        assert conn.send_tokens(3, _tok(41)) == "paused"
+        conn.send_frame(MSG_DONE, 3, pack_tensor(np.asarray([40, 41],
+                                                            np.int32)))
+        frames = [read_frame(peer) for _ in range(3)]
+        assert [f[0] for f in frames] == [MSG_TOKENS, MSG_TOKENS, MSG_DONE]
+        assert [unpack_tensor(f[5])[0] for f in frames[:2]] == [40, 41]
+        # route state retired with the terminal frame
+        assert conn.n_paused_for(3) == 0
+
+
+def test_legacy_route_still_best_effort_drop():
+    """A route that never sent CREDIT keeps the old contract: TOKENS
+    drop on overflow instead of pausing (DONE stays authoritative)."""
+    with _conn_pair() as (conn, peer):
+        assert conn.send_tokens(9, _tok(1)) is True   # no credit state at all
+        assert conn.n_paused_for(9) == 0
+        assert conn.n_paused == 0
+
+
+# =====================================================================
+# frame parser fuzz (satellite: hardening against malformed bytes)
+# =====================================================================
+
+class _ByteSock:
+    """In-memory socket feeding at most ``chunk`` bytes per recv."""
+
+    def __init__(self, data, chunk=1 << 20):
+        self.data, self.off, self.chunk = data, 0, chunk
+
+    def recv(self, n):
+        part = self.data[self.off:self.off + min(n, self.chunk)]
+        self.off += len(part)
+        return part
+
+
+def test_read_frame_eof_and_truncated_header():
+    assert read_frame(_ByteSock(b"")) is None          # orderly EOF
+    frame = pack_frame(MSG_TOKENS, 1, _tok(5))
+    for cut in range(1, HDR.size):                     # EOF mid-header
+        with pytest.raises(ConnectionError, match="mid-frame"):
+            read_frame(_ByteSock(frame[:cut]))
+    with pytest.raises(ConnectionError, match="mid-frame"):
+        read_frame(_ByteSock(frame[:-1]))              # EOF mid-payload
+
+
+def test_read_frame_rejects_bad_magic_version_and_length():
+    with pytest.raises(ProtocolError, match="magic"):
+        read_frame(_ByteSock(b"XX" + pack_frame(MSG_TOKENS, 1)[2:]))
+    bad_ver = HDR.pack(MAGIC, VERSION + 1, MSG_REQUEST, 0, 0, 0, 0.0, 0)
+    with pytest.raises(ProtocolError, match="version"):
+        read_frame(_ByteSock(bad_ver))
+    absurd = HDR.pack(MAGIC, VERSION, MSG_TOKENS, 0, 0, 0, 0.0,
+                      MAX_PAYLOAD + 1)
+    with pytest.raises(ProtocolError, match="exceeds"):
+        read_frame(_ByteSock(absurd))
+
+
+def test_read_frame_byte_at_a_time_roundtrip():
+    arr = np.arange(7, dtype=np.int32)
+    frame = pack_frame(MSG_DONE, 42, pack_tensor(arr), status=3)
+    msg, qid, lane, status, deadline, payload = \
+        read_frame(_ByteSock(frame, chunk=1))
+    assert (msg, qid, status) == (MSG_DONE, 42, 3)
+    assert np.array_equal(unpack_tensor(payload), arr)
+
+
+def _parser_never_hangs(data):
+    """The parser's full contract on arbitrary bytes: a tuple, None, or
+    ProtocolError/ConnectionError — never any other exception."""
+    try:
+        out = read_frame(_ByteSock(bytes(data), chunk=3))
+    except (ProtocolError, ConnectionError):
+        return
+    assert out is None or (isinstance(out, tuple) and len(out) == 6)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings as hyp_settings
+    from hypothesis import strategies as st
+
+    @given(st.binary(max_size=3 * HDR.size))
+    @hyp_settings(deadline=None)
+    def test_read_frame_fuzz_arbitrary_bytes(data):
+        _parser_never_hangs(data)
+
+    @given(st.binary(min_size=HDR.size, max_size=HDR.size))
+    @hyp_settings(deadline=None)
+    def test_read_frame_fuzz_header_mutations(hdr):
+        _parser_never_hangs(bytes(hdr))
+else:
+    def test_read_frame_fuzz_arbitrary_bytes():
+        rng = np.random.default_rng(0)
+        for n in (0, 1, HDR.size - 1, HDR.size, HDR.size + 5, 64):
+            for _ in range(50):
+                _parser_never_hangs(rng.integers(0, 256, n,
+                                                 dtype=np.uint8).tobytes())
+
+    def test_read_frame_fuzz_header_mutations():
+        base = bytearray(pack_frame(MSG_REQUEST, 3, b""))
+        for i in range(len(base)):
+            for v in (0, 1, 0x7F, 0xFF):
+                mutated = bytearray(base)
+                mutated[i] = v
+                _parser_never_hangs(bytes(mutated))
+
+
+# =====================================================================
+# engine-level: cancel, isolation, restart, admission storms
+# =====================================================================
+
+def test_cancel_queued_request_frees_nothing_and_answers(tiny_model):
+    model, params = tiny_model
+    eng = _paged_engine(model, params, batch_size=1)
+    rng = np.random.default_rng(3)
+    first = _rng_prompt(rng, 6)
+    queued = _rng_prompt(rng, 6)
+    rid_a = eng.submit(first)
+    while eng.n_active < 1:
+        eng.step()
+    rid_q = eng.submit(queued)               # batch_size 1: must queue
+    assert eng.cancel(rid_q) is True
+    res = {r.request_id: r
+           for r in eng.wait([rid_a, rid_q], timeout_s=120)}
+    assert res[rid_q].status == "cancelled"
+    assert len(res[rid_q].tokens) == 0       # never started
+    assert res[rid_a].status == "ok"
+    assert list(res[rid_a].tokens) == \
+        _fresh_dense_tokens(model, params, first, 4)
+    assert eng.n_cancelled == 1
+    _assert_pool_clean(eng)
+
+
+def test_cancel_mid_decode_frees_blocks_and_retained_registrations(
+        tiny_model):
+    """The acceptance scenario: cancelling a mid-decode request returns
+    its blocks AND retires any content-table registrations its full
+    pages acquired — both pools, not just the obvious one."""
+    model, params = tiny_model
+    eng = _paged_engine(model, params, max_new_tokens=8, capacity=48,
+                        num_blocks=10)
+    rng = np.random.default_rng(4)
+    prompt = _rng_prompt(rng, 8)             # 2 full pages: registrable
+    rid = eng.submit(prompt)
+    while not any(s is not None and s.rid == rid and len(s.tokens) >= 2
+                  for s in eng._slots):
+        eng.step()                           # mid-decode, partial tokens
+    assert eng.cancel(rid) is True
+    res = eng._results[rid]
+    assert res.status == "cancelled"
+    assert 0 < len(res.tokens) < 8           # partial sequence preserved
+    expected = _fresh_dense_tokens(model, params, prompt, 8)
+    assert list(res.tokens) == expected[:len(res.tokens)]
+    stats = eng.pool_stats()
+    assert stats["n_live"] == 0              # every block back
+    assert stats["n_retained"] == 0          # registrations retired too
+    assert stats["n_table"] == 0
+    _assert_pool_clean(eng)
+
+
+def test_cancel_unknown_or_finished_returns_false():
+    eng = ServeEngine(ToyModel(), params={}, batch_size=2, capacity=64,
+                      max_new_tokens=4)
+    assert eng.cancel(999) is False          # unknown rid
+    rid = eng.submit(np.asarray([2, 3], np.int32))
+    _run(eng)
+    assert eng.cancel(rid) is False          # already finished: result kept
+    assert eng._results[rid].status == "ok"
+    assert eng.n_cancelled == 0
+
+
+def test_submit_rejects_out_of_vocab_prompt(tiny_model):
+    model, params = tiny_model
+    eng = _paged_engine(model, params)
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(np.asarray([1, TINY.vocab_size + 7], np.int32))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(np.asarray([-2, 3], np.int32))
+    assert not eng.has_work                  # nothing was admitted
+    _assert_pool_clean(eng)
+
+
+def test_engine_step_fault_restarts_and_respills_survivors(tiny_model):
+    """A non-attributable step exception mid-decode: survivors are
+    spilled via the preemption path, the pools are rebuilt, and the
+    replayed requests finish bit-identical to the no-fault oracle."""
+    model, params = tiny_model
+    plan = FaultPlan([Fault(point="engine_step", nth=6)])
+    eng = _paged_engine(model, params, plan, max_new_tokens=6, capacity=48,
+                        num_blocks=12)
+    rng = np.random.default_rng(5)
+    prompts = [_rng_prompt(rng, 6), _rng_prompt(rng, 9)]
+    rids = [eng.submit(p) for p in prompts]
+    res = {r.request_id: r for r in _run(eng, timeout=120)}
+    assert eng.n_restarts == 1 and eng.n_step_failures == 1
+    for rid, p in zip(rids, prompts):
+        assert res[rid].status == "ok", res[rid].error
+        assert list(res[rid].tokens) == \
+            _fresh_dense_tokens(model, params, p, 6)
+    _assert_pool_clean(eng)
+
+
+def test_engine_step_fault_dense_fails_inflight_keeps_queued():
+    """Dense mode has no spill path: the in-flight slot is failed with
+    a clear error, queued work survives the restart untouched."""
+    plan = FaultPlan([Fault(point="engine_step", nth=3)])
+    eng = ServeEngine(ToyModel(), params={}, batch_size=1, capacity=64,
+                      max_new_tokens=4, fault_plan=plan)
+    a = np.asarray([2, 3], np.int32)
+    b = np.asarray([4, 5], np.int32)
+    rid_a = eng.submit(a)
+    while eng.n_active < 1:
+        eng.step()
+    rid_b = eng.submit(b)                    # queued behind a
+    res = {r.request_id: r
+           for r in eng.wait([rid_a, rid_b], timeout_s=60)}
+    assert res[rid_a].status == "error"
+    assert "restart" in res[rid_a].error
+    assert res[rid_b].status == "ok"
+    assert list(res[rid_b].tokens) == _expected(b, 4)
+    assert eng.n_restarts == 1
+
+
+def test_engine_wedged_past_restart_budget_fails_everything():
+    plan = FaultPlan([Fault(point="engine_step", nth=1, times=2,
+                            msg="hbm parity storm")])
+    eng = ServeEngine(ToyModel(), params={}, batch_size=2, capacity=64,
+                      max_new_tokens=4, max_restarts=1, fault_plan=plan)
+    rid = eng.submit(np.asarray([2, 3], np.int32))
+    assert eng.step() == []                  # failure 1: restart, absorbed
+    with pytest.raises(RuntimeError, match="hbm parity storm"):
+        eng.step()                           # failure 2 > budget: re-raised
+    res = eng._results[rid]
+    assert res.status == "error"
+    assert "wedged" in res.error
+    # the engine recovers once the storm passes: pools were reset
+    ok = eng.submit(np.asarray([4, 5], np.int32))
+    out = {r.request_id: r for r in _run(eng)}
+    assert out[ok].status == "ok"
+    assert list(out[ok].tokens) == _expected(np.asarray([4, 5]), 4)
+
+
+def test_admission_cachefull_storm_keeps_candidate_queued(tiny_model):
+    """An allocator trip during the fit check must park the candidate,
+    not fail it: when the storm passes it admits and completes."""
+    model, params = tiny_model
+    plan = FaultPlan([Fault(point="admit", nth=1, times=3,
+                            exc=CacheFullError, msg="injected storm")])
+    eng = _paged_engine(model, params, plan)
+    rng = np.random.default_rng(6)
+    prompt = _rng_prompt(rng, 6)
+    rid = eng.submit(prompt)
+    res = {r.request_id: r for r in _run(eng, timeout=120)}
+    assert plan.arrivals("admit") > 3        # storm was actually ridden out
+    assert res[rid].status == "ok"
+    assert list(res[rid].tokens) == _fresh_dense_tokens(model, params,
+                                                        prompt, 4)
+    _assert_pool_clean(eng)
+
+
+# =====================================================================
+# wire-level: cancel, credit, isolation, send faults, drain
+# =====================================================================
+
+def test_wire_cancel_mid_stream_returns_partial_tokens():
+    with _toy_server(max_new=200) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        prompt = np.asarray([1, 2, 3], np.int32)
+        qid = cli.submit(prompt)
+        _wait_until(lambda: cli._requests[qid].stream,
+                    what="first streamed token")
+        cli.cancel(qid)
+        r = cli.result(qid, timeout=30)
+        assert r.status == "cancelled"
+        assert 0 < len(r.tokens) < 200       # partial, not empty, not full
+        assert list(r.tokens) == _expected(prompt, 200)[:len(r.tokens)]
+        _wait_until(lambda: not srv._routes, what="routes to drain")
+        assert eng.n_cancelled == 1
+        cli.close()
+
+
+def test_wire_cancel_unknown_qid_answers_empty_done_cancelled():
+    """A CANCEL racing ahead of its REQUEST (or for a qid the server
+    never saw) must still answer — the client is never left hanging."""
+    with _toy_server() as (eng, srv):
+        raw = socket.create_connection(("127.0.0.1", srv.port), timeout=5)
+        raw.sendall(pack_frame(MSG_CANCEL, 77))
+        msg, qid, _, status, _, payload = read_frame(raw)
+        assert (msg, qid) == (MSG_DONE, 77)
+        assert STATUS_NAMES[status] == "cancelled"
+        assert unpack_tensor(payload).size == 0
+        raw.close()
+        assert srv.src.n_cancels == 1
+
+
+def test_wire_credited_route_pauses_never_drops():
+    with _toy_server() as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        _wait_until(lambda: len(srv.src.connections) == 1,
+                    what="connection accepted")
+        sconn = srv.src.connections[0]
+        prompt = np.asarray([1, 2, 3], np.int32)
+        qid = cli.submit(prompt, credit=2)   # 2 frames, then pause
+        r = cli.result(qid, timeout=30)
+        assert r.status == "ok"
+        # nothing dropped: DONE flushed the paused tail ahead of itself,
+        # so the client saw the complete stream despite zero refills
+        assert r.stream == list(r.tokens) == _expected(prompt, 6)
+        assert sconn.n_paused >= 6 - 2
+        assert sconn.n_dropped == 0
+        cli.close()
+
+
+def test_wire_credit_starved_route_killed_with_overrun():
+    with _toy_server(max_new=40, pause_limit=2) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        prompt = np.asarray([1, 2, 3], np.int32)
+        qid = cli.submit(prompt, credit=1)   # 1 frame, 2 pauses, then overrun
+        r = cli.result(qid, timeout=30)
+        assert r.status == "overrun"
+        assert 0 < len(r.tokens) < 40        # partial sequence delivered
+        assert srv.n_overrun_kills == 1
+        # the connection survives its killed route
+        ok = cli.submit(np.asarray([4, 5], np.int32))
+        assert cli.result(ok, timeout=30).status == "ok"
+        cli.close()
+
+
+def test_wire_submit_fault_fails_one_row_isolated():
+    plan = FaultPlan([Fault(point="submit", nth=1, msg="poison row")])
+    with _toy_server(plan) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        prompts = [np.asarray([i + 1, i + 2], np.int32) for i in range(3)]
+        qids = [cli.submit(p) for p in prompts]
+        results = [cli.result(q, timeout=30) for q in qids]
+        statuses = sorted(r.status for r in results)
+        assert statuses == ["error", "ok", "ok"]     # exactly one row died
+        bad = next(r for r in results if r.status == "error")
+        assert "poison row" in bad.error
+        for p, r in zip(prompts, results):
+            if r.status == "ok":
+                assert list(r.tokens) == _expected(p, 6)
+        cli.close()
+
+
+def test_wire_worker_fault_kills_batch_server_survives():
+    plan = FaultPlan([Fault(point="worker", nth=1, msg="worker died")])
+    with _toy_server(plan) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        qids = [cli.submit(np.asarray([i + 1, i + 2], np.int32))
+                for i in range(3)]
+        results = [cli.result(q, timeout=30) for q in qids]
+        # every affected row reached a terminal ERROR frame — none hang
+        assert all(r.status in ("ok", "error") for r in results)
+        assert any(r.status == "error" and "worker died" in r.error
+                   for r in results)
+        # the server keeps serving after the dead worker batch
+        ok = cli.submit(np.asarray([9, 9], np.int32))
+        r = cli.result(ok, timeout=30)
+        assert r.status == "ok"
+        assert list(r.tokens) == _expected(np.asarray([9, 9]), 6)
+        _wait_until(lambda: not srv._routes, what="routes to drain")
+        cli.close()
+
+
+def test_wire_server_close_fault_client_reconnects_and_resubmits():
+    plan = FaultPlan([Fault(point="server_send", nth=1, action="close")])
+    with _toy_server(plan) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port, reconnect=True,
+                                retries=5, backoff=0.02)
+        prompt = np.asarray([1, 2, 3], np.int32)
+        qid = cli.submit(prompt)
+        # first outbound frame tears the server-side socket down; the
+        # client redials and replays the never-started query as-is
+        r = cli.result(qid, timeout=30)
+        assert r.status == "ok"
+        assert list(r.tokens) == _expected(prompt, 6)
+        assert cli.n_reconnects >= 1
+        assert cli.n_resubmitted >= 1
+        cli.close()
+
+
+def test_wire_partial_frame_fault_fails_client_cleanly():
+    plan = FaultPlan([Fault(point="server_send", nth=1, action="partial",
+                            cut_at=4)])
+    with _toy_server(plan) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        qid = cli.submit(np.asarray([1, 2, 3], np.int32))
+        r = cli.result(qid, timeout=30)      # 4 bytes then EOF: clean error
+        assert r.status == "error"
+        assert r.ttft_s is not None and r.latency_s is not None
+        # a fresh connection works: the fault burned only one socket
+        cli2 = TensorQueryClient("127.0.0.1", srv.port)
+        ok = cli2.submit(np.asarray([4, 5], np.int32))
+        assert cli2.result(ok, timeout=30).status == "ok"
+        cli.close()
+        cli2.close()
+
+
+def test_wire_garbage_and_version_mismatch_never_kill_accept_loop():
+    with _toy_server() as (eng, srv):
+        # garbage magic: connection-scoped ERROR, then closed
+        g = socket.create_connection(("127.0.0.1", srv.port), timeout=5)
+        g.sendall(b"GARBAGE-NOT-A-FRAME-" * 4)
+        msg, qid, _, status, _, payload = read_frame(g)
+        assert (msg, qid) == (MSG_ERROR, CONN_QID)
+        assert b"magic" in payload
+        assert read_frame(g) is None         # server closed its side
+        g.close()
+        # wrong protocol version: rejected the same way, naming versions
+        v = socket.create_connection(("127.0.0.1", srv.port), timeout=5)
+        v.sendall(HDR.pack(MAGIC, VERSION + 1, MSG_REQUEST, 0, 0, 0, 0.0, 0))
+        msg, qid, _, _, _, payload = read_frame(v)
+        assert (msg, qid) == (MSG_ERROR, CONN_QID)
+        assert b"version" in payload
+        v.close()
+        # a connection that dies instantly mid-handshake is shrugged off
+        socket.create_connection(("127.0.0.1", srv.port), timeout=5).close()
+        # ...and a clean client still gets served after all three
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        r = cli.result(cli.submit(np.asarray([2, 3], np.int32)), timeout=30)
+        assert r.status == "ok"
+        cli.close()
+
+
+def test_client_close_fails_inflight_immediately():
+    """close() must complete every in-flight QueryResult with a
+    connection error *now* — not strand waiters until their timeout."""
+    with _toy_server() as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        _wait_until(lambda: len(srv.src.connections) == 1,
+                    what="connection accepted")
+        gate = threading.Event()
+        sconn = srv.src.connections[0]
+
+        class _Wedged:
+            def __init__(self, sock):
+                self._sock = sock
+
+            def sendall(self, data):
+                gate.wait(timeout=30.0)
+                return self._sock.sendall(data)
+
+            def __getattr__(self, name):
+                return getattr(self._sock, name)
+
+        sconn.sock = _Wedged(sconn.sock)     # no frame reaches the client
+        try:
+            qid = cli.submit(np.asarray([1, 2, 3], np.int32))
+            res = cli._requests[qid]
+            t0 = time.monotonic()
+            cli.close()
+            closed_in = time.monotonic() - t0
+            assert closed_in < 5.0           # did not wait out any timeout
+            assert res.done.is_set()
+            assert res.status == "error"
+            assert "closed" in res.error
+        finally:
+            gate.set()
+
+
+def test_drain_finishes_inflight_then_rejects_new_requests():
+    with _toy_server() as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        prompts = [np.asarray([i + 1, i + 2], np.int32) for i in range(3)]
+        qids = [cli.submit(p) for p in prompts]
+        # make sure all three cleared the front door before it shuts
+        _wait_until(lambda: srv.src.n_requests == 3,
+                    what="requests to be accepted")
+        assert srv.drain(timeout=30.0) is True
+        for p, q in zip(prompts, qids):      # everything answered first
+            r = cli.result(q, timeout=10)
+            assert r.status == "ok"
+            assert list(r.tokens) == _expected(p, 6)
+        # the still-open connection gets a clean rejection, not silence
+        late = cli.submit(np.asarray([8, 8], np.int32))
+        r = cli.result(late, timeout=10)
+        assert r.status == "error"
+        assert "draining" in r.error
+        # and the listener is closed for new connections
+        with pytest.raises(OSError):
+            socket.create_connection(("127.0.0.1", srv.port), timeout=0.5)
+        cli.close()
+
+
+def test_drain_timeout_cancels_leftovers_with_partial_tokens():
+    with _toy_server(max_new=2000) as (eng, srv):
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        qid = cli.submit(np.asarray([1, 2, 3], np.int32))
+        _wait_until(lambda: cli._requests[qid].stream,
+                    what="request to start streaming")
+        assert srv.drain(timeout=0.2) is False
+        r = cli.result(qid, timeout=10)      # still answered: DONE(timeout)
+        assert r.status == "timeout"
+        assert 0 < len(r.tokens) < 200
+        cli.close()
+
+
+# =====================================================================
+# the storm test: mixed faults at a rate, then full accounting audit
+# =====================================================================
+
+def test_chaos_storm_paged_pool_invariant_and_no_leaked_routes(tiny_model):
+    """Sustained mixed-fault load on the paged wire path: poison rows
+    and cancels land between healthy requests.  Afterwards every qid is
+    terminal, the block pool balances, and the route table is empty."""
+    model, params = tiny_model
+    plan = FaultPlan([Fault(point="submit", every=5, msg="storm poison")])
+    eng = _paged_engine(model, params, plan, batch_size=2, capacity=32,
+                        max_new_tokens=4, num_blocks=10)
+    srv = TensorQueryServer(eng, max_wait_ms=5.0, pad_to=16, workers=2,
+                            fault_plan=plan).start()
+    try:
+        cli = TensorQueryClient("127.0.0.1", srv.port)
+        rng = np.random.default_rng(11)
+        prompts = [_rng_prompt(rng, int(rng.integers(4, 10)))
+                   for _ in range(12)]
+        qids = [cli.submit(p) for p in prompts]
+        cancelled = set()
+        for q in qids[::4]:                  # sprinkle cancels into the storm
+            cli.cancel(q)
+            cancelled.add(q)
+        results = {q: cli.result(q, timeout=120) for q in qids}
+        # every single request reached a terminal status — nothing hangs
+        n_err = sum(r.status == "error" for r in results.values())
+        assert all(r.status in ("ok", "error", "cancelled")
+                   for r in results.values())
+        assert n_err >= 1                    # the storm actually hit
+        for q, r in results.items():     # qids are 0..11 in submit order
+            if r.status == "error":
+                assert "storm poison" in r.error
+            elif r.status == "ok" and q not in cancelled:
+                assert list(r.tokens) == _fresh_dense_tokens(
+                    model, params, prompts[q], 4)
+        _wait_until(lambda: not srv._routes, what="route table to empty")
+        assert not srv._rev                  # reverse index drained too
+        _assert_pool_clean(eng)
+        cli.close()
+    finally:
+        srv.stop()
